@@ -1,0 +1,115 @@
+"""Shared benchmark harness mirroring the paper's setup (§4.1).
+
+The main thread spawns p child threads; every child performs operations on
+the data structure under scrutiny until the timer expires; per-op runtime
+is the average of per-thread (active time / ops).  Schemes whose regions
+amortize (QSR, NER, Stamp-it — paper §4.2) wrap 100 operations per
+region_guard.
+
+CPython's GIL serializes execution, so *absolute* throughput is not the
+paper's (hardware-parallel) throughput; what is preserved and reported is
+the per-operation reclamation overhead of each scheme (number of atomic
+ops, scans, retire-list work) and — most importantly — the reclamation
+*efficiency* (unreclaimed nodes over time), which is scheduling-driven and
+reproduces the paper's qualitative separation.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core import AMORTIZED_REGION_SCHEMES, make_reclaimer
+
+#: paper §4.2: a region_guard spans 100 benchmark operations
+OPS_PER_REGION = 100
+
+
+def run_trial(
+    scheme: str,
+    n_threads: int,
+    seconds: float,
+    make_structure: Callable,
+    op: Callable,  # op(structure, reclaimer, thread_idx, op_idx) -> None
+    *,
+    sample_unreclaimed: float = 0.0,
+) -> Dict:
+    """One trial; returns {'ops', 'us_per_op', 'stats', 'samples'}."""
+    r = make_reclaimer(scheme, max_threads=n_threads + 8)
+    s = make_structure(r)
+    amortize = scheme in AMORTIZED_REGION_SCHEMES
+    stop = threading.Event()
+    counts = [0] * n_threads
+    times = [0.0] * n_threads
+    errors: List[str] = []
+    barrier = threading.Barrier(n_threads + (1 if sample_unreclaimed else 0))
+
+    def worker(idx: int) -> None:
+        try:
+            with r.thread_context():
+                barrier.wait()
+                t0 = time.perf_counter()
+                i = 0
+                while not stop.is_set():
+                    if amortize:
+                        with r.region_guard():
+                            for _ in range(OPS_PER_REGION):
+                                op(s, r, idx, i)
+                                i += 1
+                    else:
+                        for _ in range(OPS_PER_REGION):
+                            op(s, r, idx, i)
+                            i += 1
+                counts[idx] = i
+                times[idx] = time.perf_counter() - t0
+        except Exception:  # pragma: no cover
+            import traceback
+
+            errors.append(traceback.format_exc())
+
+    samples: List[Dict] = []
+
+    def sampler() -> None:
+        barrier.wait()
+        t0 = time.perf_counter()
+        while not stop.is_set():
+            samples.append({
+                "t": time.perf_counter() - t0,
+                "unreclaimed": r.unreclaimed(),
+            })
+            time.sleep(sample_unreclaimed)
+
+    threads = [
+        threading.Thread(target=worker, args=(i,)) for i in range(n_threads)
+    ]
+    if sample_unreclaimed:
+        threads.append(threading.Thread(target=sampler))
+    for t in threads:
+        t.start()
+    time.sleep(seconds)
+    stop.set()
+    for t in threads:
+        t.join()
+    if errors:
+        raise RuntimeError(errors[0])
+
+    total_ops = sum(counts)
+    us = (
+        sum(times) / max(total_ops, 1) * 1e6 * n_threads / max(n_threads, 1)
+    )
+    # paper metric: mean of per-thread (time/ops)
+    per_thread = [
+        t / c * 1e6 for t, c in zip(times, counts) if c
+    ]
+    return {
+        "ops": total_ops,
+        "us_per_op": sum(per_thread) / max(len(per_thread), 1),
+        "stats": r.stats(),
+        "scan_steps": getattr(r, "scan_steps", None)
+        and r.scan_steps.load(),
+        "reclaim_calls": getattr(r, "reclaim_calls", None)
+        and r.reclaim_calls.load(),
+        "samples": samples,
+        "final_unreclaimed": r.unreclaimed(),
+    }

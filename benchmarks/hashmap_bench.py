@@ -1,0 +1,43 @@
+"""HashMap benchmark (paper Fig. 5 / §4.1): capacity-bounded hash map with
+FIFO eviction; mimics a simulation reusing large partial results.  QSR is
+known to degrade here (the paper excludes it from the throughput plot)."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.ds import BoundedHashMap
+
+from .harness import run_trial
+
+N_BUCKETS = 256          # scaled-down from the paper's 2048
+MAX_ENTRIES = 500        # paper: 10000
+KEY_SPACE = 1500         # paper: 30000 possible partial results
+PAYLOAD = 256            # paper: 1024 bytes
+
+
+def make(r):
+    return BoundedHashMap(r, n_buckets=N_BUCKETS, max_entries=MAX_ENTRIES,
+                          payload_bytes=PAYLOAD)
+
+
+def op(m, r, idx, i):
+    m.get_or_compute(random.randrange(KEY_SPACE))
+
+
+def run(schemes, thread_counts, seconds, trials=1,
+        sample_unreclaimed=0.0):
+    rows = []
+    for scheme in schemes:
+        for p in thread_counts:
+            for t in range(trials):
+                res = run_trial(scheme, p, seconds, make, op,
+                                sample_unreclaimed=sample_unreclaimed)
+                rows.append({
+                    "bench": "hashmap", "scheme": scheme, "threads": p,
+                    "trial": t, "us_per_op": res["us_per_op"],
+                    "ops": res["ops"],
+                    "unreclaimed": res["final_unreclaimed"],
+                    "samples": res["samples"],
+                })
+    return rows

@@ -1,0 +1,54 @@
+"""List benchmark (paper Fig. 4): Harris-Michael list-based set with 10
+elements, 20% update workload (and an 80% variant for the efficiency
+analysis), key range = 2x initial size."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.ds import HarrisMichaelListSet
+
+from .harness import run_trial
+
+LIST_SIZE = 10
+KEY_RANGE = 2 * LIST_SIZE
+
+
+def make(r):
+    s = HarrisMichaelListSet(r)
+    with r.thread_context():
+        for k in range(0, KEY_RANGE, 2):
+            s.insert(k)
+    r.detach_thread()
+    return s
+
+
+def make_op(workload: float):
+    def op(s, r, idx, i):
+        rng = random.random()
+        k = random.randrange(KEY_RANGE)
+        if rng < workload / 2:
+            s.insert(k)
+        elif rng < workload:
+            s.remove(k)
+        else:
+            s.contains(k)
+
+    return op
+
+
+def run(schemes, thread_counts, seconds, workload=0.2, trials=1):
+    rows = []
+    for scheme in schemes:
+        if scheme == "lfrc":
+            continue  # paper: LFRC excluded (exceedingly poor here)
+        for p in thread_counts:
+            for t in range(trials):
+                res = run_trial(scheme, p, seconds, make, make_op(workload))
+                rows.append({
+                    "bench": f"list_w{int(workload*100)}", "scheme": scheme,
+                    "threads": p, "trial": t,
+                    "us_per_op": res["us_per_op"], "ops": res["ops"],
+                    "unreclaimed": res["final_unreclaimed"],
+                })
+    return rows

@@ -1,0 +1,37 @@
+"""Queue benchmark (paper Fig. 3): Michael&Scott queue, alternating
+enqueue/dequeue, varying thread counts, all seven schemes."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.ds import MichaelScottQueue
+
+from .harness import run_trial
+
+
+def make(r):
+    q = MichaelScottQueue(r)
+    return q
+
+
+def op(q, r, idx, i):
+    if i % 2 == 0:
+        q.enqueue(i)
+    else:
+        q.dequeue()
+
+
+def run(schemes, thread_counts, seconds, trials=1):
+    rows = []
+    for scheme in schemes:
+        for p in thread_counts:
+            for t in range(trials):
+                res = run_trial(scheme, p, seconds, make, op)
+                rows.append({
+                    "bench": "queue", "scheme": scheme, "threads": p,
+                    "trial": t, "us_per_op": res["us_per_op"],
+                    "ops": res["ops"],
+                    "unreclaimed": res["final_unreclaimed"],
+                })
+    return rows

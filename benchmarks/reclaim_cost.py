@@ -1,0 +1,27 @@
+"""Amortized-O(1) experiment (paper Prop. 2): reclamation work (retire-list
+nodes touched + cross-thread scans) per reclaimed node, as thread count
+grows.  Stamp-it's cost stays ~constant; HP/ER/QSR scale with thread count
+(they scan all threads' state)."""
+
+from __future__ import annotations
+
+from . import queue_bench
+from .harness import run_trial
+
+
+def run(schemes, thread_counts, seconds):
+    rows = []
+    for scheme in schemes:
+        if scheme == "lfrc":
+            continue  # no scan phase at all (per-reference counting)
+        for p in thread_counts:
+            res = run_trial(scheme, p, seconds, queue_bench.make,
+                            queue_bench.op)
+            reclaimed = max(res["stats"]["reclaimed"], 1)
+            scans = res["scan_steps"] or 0
+            rows.append({
+                "bench": "reclaim_cost", "scheme": scheme, "threads": p,
+                "scan_steps_per_reclaimed": scans / reclaimed,
+                "reclaimed": reclaimed,
+            })
+    return rows

@@ -1,0 +1,31 @@
+"""Reclamation efficiency (paper §4.4, Figs. 6/8-11): unreclaimed nodes
+over time.  LFRC is the gold standard (immediate); Stamp-it should track
+it closely; HP/DEBRA degrade with thread count; QSR strands nodes in the
+update-heavy hashmap workload."""
+
+from __future__ import annotations
+
+from . import hashmap_bench, queue_bench
+from .harness import run_trial
+
+
+def run(schemes, n_threads, seconds, sample_every=0.05):
+    rows = []
+    for scheme in schemes:
+        res = run_trial(
+            scheme, n_threads, seconds, hashmap_bench.make,
+            hashmap_bench.op, sample_unreclaimed=sample_every,
+        )
+        series = [(round(s["t"], 3), s["unreclaimed"])
+                  for s in res["samples"]]
+        rows.append({
+            "bench": "reclamation_efficiency", "scheme": scheme,
+            "threads": n_threads,
+            "final_unreclaimed": res["final_unreclaimed"],
+            "mean_unreclaimed": (
+                sum(u for _, u in series) / max(len(series), 1)
+            ),
+            "max_unreclaimed": max((u for _, u in series), default=0),
+            "series": series,
+        })
+    return rows

@@ -1,0 +1,63 @@
+"""Roofline table (§Roofline): aggregates the dry-run JSONs into the
+per-(arch x shape x mesh) three-term table with dominant bottleneck,
+MODEL_FLOPS/HLO ratio and roofline fraction."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for f in sorted(RESULTS.glob("*.json")):
+        if f.name == "skipped.json":
+            continue
+        r = json.loads(f.read_text())
+        cells.append(r)
+    return cells
+
+
+def table(mesh: str = "16x16"):
+    rows = []
+    for r in load_cells():
+        if not r.get("ok") or r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": t["compute_term_s"],
+            "memory_s": t["memory_term_s"],
+            "collective_s": t["collective_term_s"],
+            "dominant": t["dominant"],
+            "model_gflops": t["model_flops"] / 1e9,
+            "useful_ratio": t["useful_compute_ratio"],
+            "roofline_frac": t["roofline_fraction"],
+            "hbm_gb_per_dev": r["memory"]["per_device_total"] / 2**30,
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def markdown(mesh: str = "16x16") -> str:
+    rows = table(mesh)
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful | roofline frac | HBM GB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['hbm_gb_per_dev']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown("16x16"))
+    print()
+    print(markdown("2x16x16"))

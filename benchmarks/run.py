@@ -1,0 +1,84 @@
+"""Benchmark runner: one entry per paper table/figure + the beyond-paper
+serving-layer benchmark and the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--out results.json]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the benchmark's
+headline secondary metric).  --full uses paper-scale durations; the default
+is a fast CI-sized pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+SCHEMES = ["stamp-it", "er", "ner", "qsr", "hpr", "debra", "lfrc", "ibr"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale durations (minutes)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).parent / "results" / "bench_results.json"))
+    args = ap.parse_args()
+
+    seconds = 2.0 if args.full else 0.4
+    threads = [1, 2, 4, 8] if args.full else [2, 4]
+    trials = 3 if args.full else 1
+
+    from . import (
+        hashmap_bench,
+        list_bench,
+        queue_bench,
+        reclaim_cost,
+        reclamation_efficiency,
+        serving_bench,
+    )
+
+    all_rows = []
+
+    def emit(rows, metric, derived_key):
+        for r in rows:
+            name = (
+                f"{r['bench']}/{r.get('scheme', r.get('policy'))}"
+                f"/p{r.get('threads', '')}"
+            )
+            print(f"{name},{r.get(metric, '')},{r.get(derived_key, '')}",
+                  flush=True)
+        all_rows.extend(rows)
+
+    # paper Fig. 3
+    emit(queue_bench.run(SCHEMES, threads, seconds, trials),
+         "us_per_op", "unreclaimed")
+    # paper Fig. 4 (20% updates)
+    emit(list_bench.run(SCHEMES, threads, seconds, 0.2, trials),
+         "us_per_op", "unreclaimed")
+    # paper Fig. 10 flavour (80% updates)
+    emit(list_bench.run(SCHEMES, threads, seconds, 0.8, trials),
+         "us_per_op", "unreclaimed")
+    # paper Fig. 5
+    emit(hashmap_bench.run(SCHEMES, threads, seconds, trials),
+         "us_per_op", "unreclaimed")
+    # paper Fig. 6 / 8-11
+    eff = reclamation_efficiency.run(
+        SCHEMES, max(threads), max(seconds, 1.0))
+    for r in eff:
+        r.pop("series", None)
+    emit(eff, "mean_unreclaimed", "final_unreclaimed")
+    # Prop. 2
+    emit(reclaim_cost.run(SCHEMES, threads, seconds),
+         "scan_steps_per_reclaimed", "reclaimed")
+    # beyond-paper: serving layer
+    emit(serving_bench.run(), "time_s", "peak_unreclaimed_pages")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1, default=str))
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: serve a small model with batched requests through the
+continuous-batching engine — paged KV cache, prefix cache, and Stamp-it
+page reclamation under asynchronous dispatch.
+
+    PYTHONPATH=src python examples/serve_paged.py --policy stamp-it
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.models import Model
+from repro.serving import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="stamp-it",
+                    choices=["stamp-it", "epoch", "scan", "refcount"])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    model = Model(smoke_config(ARCHS["granite-3-8b"]))
+    eng = ServingEngine(
+        model, max_slots=3, max_seq=512, policy=args.policy,
+        pipeline_depth=3, prefix_cache_entries=16, extra_pages_per_slot=4,
+    )
+    rs = np.random.RandomState(0)
+    shared_prefix = list(rs.randint(1, 500, 128).astype(int))
+    for i in range(args.requests):
+        # half the requests share a 128-token prefix (prefix-cache hits)
+        if i % 2 == 0:
+            prompt = shared_prefix + list(
+                rs.randint(1, 500, rs.randint(5, 60)).astype(int))
+        else:
+            prompt = list(rs.randint(1, 500, rs.randint(50, 250)).astype(int))
+        eng.submit(prompt, max_new_tokens=args.max_new)
+
+    t0 = time.perf_counter()
+    done = eng.run_until_done()
+    dt = time.perf_counter() - t0
+    eng.drain()
+
+    toks = sum(len(r.generated) for r in done)
+    print(f"policy={args.policy}  requests={len(done)}  "
+          f"generated={toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s on CPU)")
+    for r in done[:4]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
+    s = eng.stats()
+    print(f"engine steps: {s['steps']}  prefix hits/misses: "
+          f"{s['prefix_hits']}/{s['prefix_misses']}  "
+          f"pages recycled: {s['pool_freed']}  "
+          f"unreclaimed after drain: {s['pool_unreclaimed']}")
+
+
+if __name__ == "__main__":
+    main()

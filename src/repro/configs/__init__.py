@@ -1,0 +1,60 @@
+"""Architecture registry: the 10 assigned configs + shapes.
+
+``--arch <id>`` everywhere resolves through :data:`ARCHS`.
+"""
+
+from .base import SHAPES, ModelConfig, ShapeConfig, smoke_config
+from .seamless_m4t_medium import CONFIG as seamless_m4t_medium
+from .qwen2_0_5b import CONFIG as qwen2_0_5b
+from .minitron_4b import CONFIG as minitron_4b
+from .phi3_mini_3_8b import CONFIG as phi3_mini_3_8b
+from .granite_3_8b import CONFIG as granite_3_8b
+from .mamba2_2_7b import CONFIG as mamba2_2_7b
+from .llava_next_34b import CONFIG as llava_next_34b
+from .mixtral_8x7b import CONFIG as mixtral_8x7b
+from .granite_moe_3b_a800m import CONFIG as granite_moe_3b_a800m
+from .zamba2_7b import CONFIG as zamba2_7b
+
+ARCHS = {
+    c.name: c
+    for c in [
+        seamless_m4t_medium,
+        qwen2_0_5b,
+        minitron_4b,
+        phi3_mini_3_8b,
+        granite_3_8b,
+        mamba2_2_7b,
+        llava_next_34b,
+        mixtral_8x7b,
+        granite_moe_3b_a800m,
+        zamba2_7b,
+    ]
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; available: {sorted(ARCHS)}"
+        ) from None
+
+
+def cells():
+    """All runnable (arch, shape) dry-run cells + documented skips."""
+    runnable, skipped = [], []
+    for cfg in ARCHS.values():
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and not cfg.sub_quadratic:
+                skipped.append((cfg.name, shape.name,
+                                "full attention: unbounded 500k KV state"))
+            else:
+                runnable.append((cfg.name, shape.name))
+    return runnable, skipped
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "get_arch",
+    "smoke_config", "cells",
+]

@@ -1,0 +1,20 @@
+"""seamless-m4t-medium [audio, enc-dec] — arXiv:2308.11596 (hf).
+
+12L encoder + 12L decoder, d_model=1024, 16H (GQA kv=16), d_ff=4096,
+vocab=256206.  The audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings straight into the encoder.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    num_layers=12,          # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    norm="layernorm",
+)

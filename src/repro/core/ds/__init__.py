@@ -1,0 +1,16 @@
+"""Scheme-agnostic lock-free data structures used by the paper's benchmarks
+(§4.1): Michael & Scott queue, Michael's improved version of Harris'
+list-based set, and the hash-map built from it (plus the FIFO-bounded
+variant used by the HashMap benchmark).
+"""
+
+from .queue import MichaelScottQueue
+from .list_set import HarrisMichaelListSet
+from .hash_map import HashMap, BoundedHashMap
+
+__all__ = [
+    "MichaelScottQueue",
+    "HarrisMichaelListSet",
+    "HashMap",
+    "BoundedHashMap",
+]

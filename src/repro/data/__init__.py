@@ -1,0 +1,3 @@
+from .pipeline import SyntheticDataPipeline
+
+__all__ = ["SyntheticDataPipeline"]

@@ -1,0 +1,136 @@
+"""Dispatching wrappers for the compute hot-spots.
+
+Each op has three execution paths:
+  * ``ref``        — pure-jnp oracle (:mod:`repro.kernels.ref`); also the
+                     XLA path used for dry-run lowering (Mosaic/TPU kernels
+                     cannot lower on the CPU container).
+  * ``pallas``     — the TPU kernel (``interpret=False``, target hardware).
+  * ``interpret``  — the same Pallas kernel body executed in Python on CPU
+                     (correctness validation; see tests/test_kernels.py).
+
+Selection: explicit ``impl=`` argument > ``REPRO_KERNEL_IMPL`` env var >
+default ``ref``.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+
+from . import ref
+
+
+def _impl(impl: Optional[str]) -> str:
+    return impl or os.environ.get("REPRO_KERNEL_IMPL", "ref")
+
+
+# ---------------------------------------------------------------------------
+# Distributed decode configuration (set by the launcher; §Perf iteration 2)
+# ---------------------------------------------------------------------------
+_DIST = {"mesh": None, "batch_part": None, "axis": "model"}
+
+
+def configure_dist_decode(mesh, batch_part, axis: str = "model") -> None:
+    _DIST.update(mesh=mesh, batch_part=batch_part, axis=axis)
+
+
+def clear_dist_decode() -> None:
+    _DIST.update(mesh=None, batch_part=None)
+
+
+def dist_decode_config():
+    if _DIST["mesh"] is None or os.environ.get("REPRO_DIST_DECODE") == "0":
+        return None
+    return dict(_DIST)
+
+
+_DIST_MOE = {"mesh": None, "batch_part": None, "axis": "model"}
+
+
+def configure_dist_moe(mesh, batch_part, axis: str = "model") -> None:
+    _DIST_MOE.update(mesh=mesh, batch_part=batch_part, axis=axis)
+
+
+def clear_dist_moe() -> None:
+    _DIST_MOE.update(mesh=None, batch_part=None)
+
+
+def dist_moe_config():
+    if _DIST_MOE["mesh"] is None or os.environ.get("REPRO_DIST_MOE") == "0":
+        return None
+    return dict(_DIST_MOE)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    chunk=0, impl: Optional[str] = None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            chunk=chunk,
+        )
+    from .flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        interpret=(mode == "interpret"),
+    )
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     impl: Optional[str] = None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.decode_attention(q, k_cache, v_cache, lengths)
+    from .paged_attention import decode_attention_pallas
+
+    return decode_attention_pallas(
+        q, k_cache, v_cache, lengths, interpret=(mode == "interpret")
+    )
+
+
+def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
+                    impl: Optional[str] = None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.paged_attention(q, k_pool, v_pool, block_table, lengths)
+    from .paged_attention import paged_attention_pallas
+
+    return paged_attention_pallas(
+        q, k_pool, v_pool, block_table, lengths,
+        interpret=(mode == "interpret"),
+    )
+
+
+def ssd_chunk_scan(x, dt, a, b, c, *, chunk=128, d_skip=None,
+                   init_state=None, impl: Optional[str] = None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.ssd_chunk_scan(
+            x, dt, a, b, c, chunk=chunk, d_skip=d_skip,
+            init_state=init_state,
+        )
+    from .ssd_scan import ssd_chunk_scan_pallas
+
+    return ssd_chunk_scan_pallas(
+        x, dt, a, b, c, chunk=chunk, d_skip=d_skip, init_state=init_state,
+        interpret=(mode == "interpret"),
+    )
+
+
+def ssd_decode_step(x, dt, a, b, c, state, *, d_skip=None,
+                    impl: Optional[str] = None):
+    # single-token recurrence is bandwidth-trivial; always the jnp path
+    return ref.ssd_decode_step(x, dt, a, b, c, state, d_skip=d_skip)
+
+
+def block_gather(pool, indices, *, impl: Optional[str] = None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.block_gather(pool, indices)
+    from .block_gather import block_gather_pallas
+
+    return block_gather_pallas(pool, indices, interpret=(mode == "interpret"))

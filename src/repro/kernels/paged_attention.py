@@ -1,0 +1,226 @@
+"""Pallas TPU decode attention: contiguous cache and paged (block-table)
+variants.
+
+The paged kernel is the serving-layer payoff of the stamped BlockPool:
+pages recycled by the reclaimer are *physically scattered* in the pool, and
+the kernel streams them HBM->VMEM in table order via **scalar prefetch**
+(pltpu.PrefetchScalarGridSpec) — the block table is read by the index_map,
+so the gathered KV never materializes in HBM (the pure-jnp oracle gathers;
+numerics identical).
+
+Grid: (B, Hkv, n_kv_blocks), innermost sequential; the online-softmax
+state (acc / m / l) for the GQA query group persists in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, block_k: int, n_kv: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]        # (G, D) — storage dtype into the MXU
+    k = k_ref[0, :, 0, :]  # (bk, D)
+    v = v_ref[0, :, 0, :]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (G, bk)
+
+    length = lengths_ref[b]
+    kv_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], block_k), 1
+    )
+    s = jnp.where(kv_pos < length, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,        # (B, H, D)
+    k_cache: jax.Array,  # (B, S_max, Hkv, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,) int32
+    *,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    assert H % Hkv == 0
+    G = H // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    n_kv = S // block_k
+    scale = float(1.0 / (D ** 0.5))
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=block_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hkv, n_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, ik, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, ik, *_: (b, ik, h, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, ik, *_: (b, ik, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, ik, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, D), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the block table drives the k/v index maps (scalar prefetch)
+# ---------------------------------------------------------------------------
+def paged_attention_pallas(
+    q: jax.Array,            # (B, H, D)
+    k_pool: jax.Array,       # (B, N_pool, block, Hkv, D) per-seq pools
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, max_blocks) int32 (local page ids)
+    lengths: jax.Array,      # (B,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    _, n_pool, block, Hkv, _ = k_pool.shape
+    max_blocks = block_table.shape[1]
+    G = H // Hkv
+    scale = float(1.0 / (D ** 0.5))
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               block_k=block, n_kv=max_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_table, lengths
+            grid=(B, Hkv, max_blocks),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, ik, *_: (b, h, 0, 0)),
+                # page id comes from the prefetched block table
+                pl.BlockSpec(
+                    (1, 1, block, 1, D),
+                    lambda b, h, ik, table, lens: (
+                        b, table[b, ik], 0, h, 0
+                    ),
+                ),
+                pl.BlockSpec(
+                    (1, 1, block, 1, D),
+                    lambda b, h, ik, table, lens: (
+                        b, table[b, ik], 0, h, 0
+                    ),
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, ik, *_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, D), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pool, v_pool)
+    return out.reshape(B, H, D)
+
+
+def _paged_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  scale: float, block_k: int, n_kv: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]            # (G, D)
+    k = k_ref[0, 0, :, 0, :]   # (block, D)
+    v = v_ref[0, 0, :, 0, :]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    # positions are *logical*: page ik covers [ik*block, (ik+1)*block)
+    length = lengths_ref[b]
+    kv_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], block_k), 1
+    )
+    s = jnp.where(kv_pos < length, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)

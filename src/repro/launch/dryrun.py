@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes (16x16 single pod, 2x16x16 multi-pod) and
+extract the roofline terms from the compiled artifact.
+
+MUST be run as its own process (the XLA flag above is set before any jax
+import and locks the device count at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+        --shape train_4k [--multi-pod] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--jobs 2]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             seq_parallel: bool = True, save_hlo: bool = False,
+             mesh_shape: str = "") -> dict:
+    import jax
+
+    from ..configs import SHAPES, get_arch
+    from ..models import Model
+    from . import hlo_stats, roofline
+    from .mesh import make_production_mesh
+    from .steps import build_step
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if mesh_shape:
+        # per-arch remedies (e.g. llava's 56 heads want TP=8: "32x8")
+        import numpy as np
+
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        n = int(np.prod(dims))
+        mesh = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:n]).reshape(dims), names)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = Model(cfg)
+
+    t0 = time.time()
+    kw = {}
+    if shape.kind != "decode":
+        kw["seq_parallel"] = seq_parallel
+    fn, args, _ = build_step(model, shape, mesh, **kw)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    stats = hlo_stats.program_stats(hlo)
+    colls = hlo_stats.collective_stats(hlo)
+    mf = roofline.model_flops(cfg, shape, model)
+    score_tr = roofline.attn_score_hbm_traffic(cfg, shape)
+    tms = roofline.terms(stats, n_dev, mf, score_tr)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_shape or ("2x16x16" if multi_pod else "16x16"),
+        "n_devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "n_params": model.n_params(),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            # per-device live working set (donated args alias outputs)
+            "per_device_total": (
+                mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                - mem.alias_size_in_bytes
+                + mem.temp_size_in_bytes
+            ),
+        },
+        "cost_analysis": {
+            "flops_raw": cost.get("flops", 0.0),
+            "bytes_raw": cost.get("bytes accessed", 0.0),
+        },
+        "per_device": stats,
+        "collectives": colls,
+        "roofline": tms,
+    }
+    if save_hlo:
+        hdir = RESULTS_DIR / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{result['mesh']}"
+        (hdir / f"{tag}.txt").write_text(hlo)
+    return result
+
+
+def cell_filename(arch, shape, multi_pod):
+    return f"{arch}__{shape}__{'2x16x16' if multi_pod else '16x16'}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh-shape", default="",
+                    help="override mesh, e.g. 32x8 (data,model)")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        run_all(args.jobs, args.skip_done)
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    try:
+        result = run_cell(args.arch, args.shape, args.multi_pod,
+                          seq_parallel=not args.no_seq_parallel,
+                          save_hlo=args.save_hlo,
+                          mesh_shape=args.mesh_shape)
+    except Exception as e:  # noqa: BLE001
+        result = {
+            "arch": args.arch, "shape": args.shape,
+            "mesh": "2x16x16" if args.multi_pod else "16x16",
+            "ok": False, "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    tag = (args.mesh_shape if args.mesh_shape else
+           ("2x16x16" if args.multi_pod else "16x16"))
+    out = args.out or str(
+        RESULTS_DIR / f"{args.arch}__{args.shape}__{tag}.json"
+    )
+    Path(out).parent.mkdir(parents=True, exist_ok=True)
+    Path(out).write_text(json.dumps(result, indent=2, default=float))
+    print(json.dumps(
+        {k: result.get(k) for k in
+         ("arch", "shape", "mesh", "ok", "compile_s", "error")},
+    ))
+    if not result.get("ok"):
+        sys.exit(1)
+
+
+def run_all(jobs: int, skip_done: bool) -> None:
+    """Spawn one subprocess per cell (device-count flag is per-process)."""
+    import subprocess
+
+    from ..configs import cells
+
+    runnable, skipped = cells()
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / "skipped.json").write_text(
+        json.dumps(skipped, indent=2)
+    )
+    todo = []
+    for multi_pod in (False, True):
+        for arch, shape in runnable:
+            fp = RESULTS_DIR / cell_filename(arch, shape, multi_pod)
+            if skip_done and fp.exists():
+                try:
+                    if json.loads(fp.read_text()).get("ok"):
+                        continue
+                except Exception:  # noqa: BLE001
+                    pass
+            todo.append((arch, shape, multi_pod))
+
+    print(f"{len(todo)} cells to run, {jobs} at a time", flush=True)
+    procs = []
+    while todo or procs:
+        while todo and len(procs) < jobs:
+            arch, shape, mp = todo.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if mp:
+                cmd.append("--multi-pod")
+            p = subprocess.Popen(cmd)
+            procs.append((p, arch, shape, mp, time.time()))
+        done, procs = (
+            [x for x in procs if x[0].poll() is not None],
+            [x for x in procs if x[0].poll() is None],
+        )
+        for p, arch, shape, mp, t0 in done:
+            status = "OK" if p.returncode == 0 else f"FAIL({p.returncode})"
+            print(f"[{status}] {arch} {shape} "
+                  f"{'2x16x16' if mp else '16x16'} {time.time()-t0:.0f}s",
+                  flush=True)
+        time.sleep(2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data, model);
+multi-pod: 2x16x16 = 512 chips (pod, data, model).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes
+    )
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests on 1-device CPU)."""
+    import numpy as np
+
+    devices = jax.devices()[: data * model]
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape((data, model)), ("data", "model")
+    )

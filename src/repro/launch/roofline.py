@@ -1,0 +1,162 @@
+"""Roofline terms (TPU v5e target) from the compiled dry-run artifact.
+
+    compute term    = FLOPs_per_device    / peak_FLOPs
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw
+
+(the per-device form is identical to the brief's global form: global = per
+device x chips, and the denominator carries the same chips factor).
+
+MODEL_FLOPS is the analytic useful compute (6*N*D train / 2*N*D inference,
+active-params for MoE, + attention/SSD terms), so the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute and dispatch waste.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model
+from ..models.param import tree_map_specs
+
+# TPU v5e per chip
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9       # bytes/s
+LINK_BW = 50e9       # bytes/s per ICI link
+
+
+def _param_partition(model: Model) -> Dict[str, float]:
+    """total / token-table / expert params, from the spec tree."""
+    acc = {"total": 0.0, "tok": 0.0, "expert": 0.0}
+
+    def visit(path, s):
+        import numpy as np
+
+        n = float(np.prod(s.shape))
+        acc["total"] += n
+        if path.endswith("embed/tok"):
+            acc["tok"] += n
+        if "/moe/" in path and not path.endswith("router"):
+            acc["expert"] += n
+
+    tree_map_specs(visit, model.param_specs)
+    return acc
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, model: Model) -> float:
+    """Analytic useful FLOPs per step (6ND / 2ND + attention/SSD terms)."""
+    parts = _param_partition(model)
+    n_total, n_tok, n_exp = parts["total"], parts["tok"], parts["expert"]
+    # active params: experts scaled k/E; token table excluded unless tied
+    # (tied tables do the unembed matmul)
+    n_active = n_total - n_exp
+    if cfg.num_experts:
+        n_active += n_exp * cfg.experts_per_token / cfg.num_experts
+    if not cfg.tie_embeddings:
+        n_active -= n_tok  # gather only
+
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = B * S
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = B
+        factor = 2.0
+    flops = factor * n_active * tokens
+
+    # attention score/value matmuls (not in the params term)
+    H = cfg.num_heads
+    D = cfg.resolved_head_dim
+    if H and not cfg.attention_free:
+        n_attn_layers = cfg.num_layers + cfg.encoder_layers
+        if cfg.family == "hybrid":
+            n_attn_layers = cfg.num_layers // cfg.attn_period
+        if shape.kind == "decode":
+            ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            flops += 4.0 * B * ctx * H * D * n_attn_layers
+        else:
+            ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            # causal: each query attends ~min(pos, ctx) keys; approx S*ctx/2
+            eff = S * ctx if cfg.sliding_window else S * S / 2
+            mult = 3.0 if shape.kind == "train" else 1.0
+            flops += mult * 4.0 * B * eff * H * D * n_attn_layers
+
+    # SSD terms
+    if cfg.ssm_state:
+        Hs, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        L = cfg.ssm_chunk
+        if shape.kind == "decode":
+            flops += 2.0 * B * Hs * P * N * cfg.num_layers
+        else:
+            per_tok = 2.0 * Hs * (L * (N + P) + 2 * N * P)
+            mult = 3.0 if shape.kind == "train" else 1.0
+            flops += mult * per_tok * B * S * cfg.num_layers
+    return flops
+
+
+def attn_score_hbm_traffic(cfg: ModelConfig, shape: ShapeConfig,
+                           n_devices_model: int = 16) -> float:
+    """Analytic HBM bytes (global) of materialized attention score/prob
+    tiles in the pure-jnp flash path — traffic the Pallas kernel keeps in
+    VMEM on real TPUs (reported as the kernel-credited adjustment)."""
+    H = cfg.num_heads
+    if not H or cfg.attention_free or shape.kind == "decode":
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    n_layers = cfg.num_layers + cfg.encoder_layers
+    if cfg.family == "hybrid":
+        n_layers = cfg.num_layers // cfg.attn_period
+    passes = 3.0 if shape.kind == "train" else 1.0  # fwd + remat + bwd
+    # scores written+read once per pass, f32
+    return passes * 2.0 * B * H * S * ctx * 4.0 * n_layers
+
+
+def terms(per_device: Dict[str, float], n_devices: int,
+          model_fl: float, score_traffic_global: float = 0.0
+          ) -> Dict[str, float]:
+    compute_t = per_device["flops"] / PEAK_FLOPS
+    memory_t = per_device["bytes"] / HBM_BW
+    coll_t = per_device["collective_wire_bytes"] / LINK_BW
+    # kernel-credited memory term: subtract score-tile HBM traffic that
+    # the Pallas flash kernels keep in VMEM (heads may be replicated over
+    # the model axis, so per-device traffic can exceed global/n_devices —
+    # cap the credit at 95% of the measured term).
+    mem_adj = max(
+        memory_t - score_traffic_global / max(n_devices, 1) / HBM_BW,
+        0.05 * memory_t,
+    )
+    dominant = max(
+        ("compute", compute_t), ("memory", memory_t),
+        ("collective", coll_t), key=lambda kv: kv[1],
+    )[0]
+    total_hlo_flops = per_device["flops"] * n_devices
+    return {
+        "compute_term_s": compute_t,
+        "memory_term_s": memory_t,
+        "memory_term_kernel_adj_s": mem_adj,
+        "collective_term_s": coll_t,
+        "dominant": dominant,
+        "model_flops": model_fl,
+        "hlo_flops_global": total_hlo_flops,
+        "useful_compute_ratio": (
+            model_fl / total_hlo_flops if total_hlo_flops else 0.0
+        ),
+        # fraction of roofline at the bottleneck: useful-time / actual-time
+        "roofline_fraction": (
+            (model_fl / (n_devices * PEAK_FLOPS))
+            / max(compute_t, memory_t, coll_t)
+            if max(compute_t, memory_t, coll_t) > 0
+            else 0.0
+        ),
+        "roofline_fraction_kernel_adj": (
+            (model_fl / (n_devices * PEAK_FLOPS))
+            / max(compute_t, mem_adj, coll_t)
+            if max(compute_t, mem_adj, coll_t) > 0
+            else 0.0
+        ),
+    }

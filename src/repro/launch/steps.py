@@ -1,0 +1,233 @@
+"""Step builders: jit'd train / prefill / decode steps with explicit
+in/out shardings for a given (model, mesh, shape) cell.
+
+Used by the dry-run (lower + compile on abstract values), the trainer and
+the server (real arrays).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import sharding as SH
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model, abstract_params
+from ..models.param import tree_map_specs
+from ..training import optimizer as opt
+
+
+def shardings_of(spec_tree, rules, mesh):
+    return SH.param_shardings(spec_tree, rules, mesh)
+
+
+def abstract_of(spec_tree):
+    return abstract_params(spec_tree)
+
+
+def make_constrain(mesh: Mesh, global_batch: int, kind: str):
+    """Sequence-parallel activation constraint on the residual stream."""
+    bspec = SH.batch_spec(mesh, kind, 0, global_batch)
+    batch_part = bspec[0] if len(bspec) else None
+    model_size = mesh.shape.get("model", 1)
+
+    def constrain(x):
+        if (
+            x.ndim == 3
+            and model_size > 1
+            and x.shape[1] % model_size == 0
+            and x.shape[1] > 1
+        ):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch_part, "model", None))
+            )
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch_part, None, None))
+            )
+        return x
+
+    return constrain
+
+
+def _configure_dist(model: Model, shape: ShapeConfig, mesh: Mesh) -> None:
+    """Enable the shard_map MoE block (and, for decode, the distributed
+    flash-decode) on multi-device meshes."""
+    from ..kernels import ops as _ops
+
+    if model.cfg.num_experts and mesh.devices.size > 1:
+        bspec = SH.batch_spec(mesh, "serve", 0, shape.global_batch)
+        _ops.configure_dist_moe(mesh, bspec[0] if len(bspec) else None)
+    elif mesh.devices.size <= 1:
+        _ops.clear_dist_moe()
+
+
+def batch_shardings(model: Model, shape: ShapeConfig, mesh: Mesh, rules):
+    specs = model.input_specs(shape)
+
+    def shard(path, s):
+        # first logical axis is "batch"; rest as declared
+        return NamedSharding(
+            mesh,
+            SH.spec_for_axes(s.axes, dict(rules), mesh, s.shape),
+        )
+
+    return tree_map_specs(shard, specs)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+def build_train_step(
+    model: Model,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    remat: str = "full",
+    adamw: Optional[opt.AdamWConfig] = None,
+    seq_parallel: bool = True,
+):
+    """Returns (jit_fn, abstract_args, shardings) for the full train step."""
+    adamw = adamw or opt.AdamWConfig()
+    rules = SH.rules_for("train")
+    # dynamic batch rule resolved per global_batch
+    rules = dict(rules)
+    rules["batch"] = tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names
+    )
+
+    _configure_dist(model, shape, mesh)
+    p_specs = model.param_specs
+    o_specs = opt.opt_state_specs(p_specs)
+    p_shard = shardings_of(p_specs, rules, mesh)
+    o_shard = shardings_of(o_specs, rules, mesh)
+    b_shard = batch_shardings(model, shape, mesh, rules)
+    constrain = (
+        make_constrain(mesh, shape.global_batch, "train")
+        if seq_parallel
+        else (lambda x: x)
+    )
+
+    compute_dtype = jnp.dtype(model.cfg.dtype)
+
+    def cast_for_compute(p):
+        # cast weights ONCE at step entry so FSDP weight all-gathers move
+        # bf16, not f32 (halves weight-gather wire; §Perf iteration).
+        # Grads still flow to the f32 masters through the cast.
+        return jax.tree.map(
+            lambda x: x.astype(compute_dtype)
+            if x.dtype == jnp.float32 and x.ndim >= 2 else x,
+            p,
+        )
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cast_for_compute(p), batch,
+                                    constrain=constrain, remat=remat),
+            has_aux=True,
+        )(params)
+        new_params, new_opt, gnorm = opt.adamw_update(
+            adamw, grads, opt_state, params
+        )
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+    args = (abstract_of(p_specs), abstract_of(o_specs),
+            abstract_of(model.input_specs(shape)))
+    return fn, args, (p_shard, o_shard, b_shard)
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill
+# ---------------------------------------------------------------------------
+def serve_param_specs(model: Model):
+    """Serving stores weights in the compute dtype (bf16) outright —
+    halves weight HBM + read traffic vs f32 masters (§Perf iteration)."""
+    from ..models.param import ParamSpec
+
+    dt = jnp.dtype(model.cfg.dtype)
+
+    def cast(path, s):
+        if s.dtype == jnp.float32 and len(s.shape) >= 2:
+            return ParamSpec(s.shape, s.axes, dtype=dt, init=s.init,
+                             scale=s.scale)
+        return s
+
+    return tree_map_specs(cast, model.param_specs)
+
+
+def build_prefill_step(model: Model, shape: ShapeConfig, mesh: Mesh,
+                       *, seq_parallel: bool = True):
+    rules = dict(SH.rules_for("serve"))
+    rules["batch"] = tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names
+    )
+    _configure_dist(model, shape, mesh)
+    p_specs = serve_param_specs(model)
+    p_shard = shardings_of(p_specs, rules, mesh)
+    b_shard = batch_shardings(model, shape, mesh, rules)
+    constrain = (
+        make_constrain(mesh, shape.global_batch, "serve")
+        if seq_parallel
+        else (lambda x: x)
+    )
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, constrain=constrain)
+
+    fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+    args = (abstract_of(p_specs), abstract_of(model.input_specs(shape)))
+    return fn, args, (p_shard, b_shard)
+
+
+# ---------------------------------------------------------------------------
+# Serve: decode
+# ---------------------------------------------------------------------------
+def build_decode_step(model: Model, shape: ShapeConfig, mesh: Mesh,
+                      dist_decode: bool = True):
+    rules = dict(SH.rules_for("serve"))
+    rules["batch"] = tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names
+    )
+    if dist_decode:
+        from ..kernels import ops as _ops
+
+        bspec = SH.batch_spec(mesh, "serve", 0, shape.global_batch)
+        _ops.configure_dist_decode(mesh, bspec[0] if len(bspec) else None)
+    _configure_dist(model, shape, mesh)
+    p_specs = serve_param_specs(model)
+    c_specs = model.cache_specs(shape)
+    p_shard = shardings_of(p_specs, rules, mesh)
+    c_shard = shardings_of(c_specs, rules, mesh)
+    b_shard = batch_shardings(model, shape, mesh, rules)
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    fn = jax.jit(
+        decode_step,
+        in_shardings=(p_shard, c_shard, b_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,),
+    )
+    args = (abstract_of(p_specs), abstract_of(c_specs),
+            abstract_of(model.input_specs(shape)))
+    return fn, args, (p_shard, c_shard, b_shard)
+
+
+def build_step(model: Model, shape: ShapeConfig, mesh: Mesh, **kw):
+    if shape.kind == "train":
+        return build_train_step(model, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, shape, mesh, **kw)
+    return build_decode_step(model, shape, mesh, **kw)

@@ -1,0 +1,6 @@
+from .block_pool import BlockPool, PoolExhausted
+from .prefix_cache import PrefixCache, block_key
+from .stamp_ledger import StampLedger
+
+__all__ = ["BlockPool", "PoolExhausted", "PrefixCache", "block_key",
+           "StampLedger"]

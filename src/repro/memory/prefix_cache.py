@@ -1,0 +1,106 @@
+"""FIFO-bounded prefix cache over KV pages.
+
+The serving-layer analogue of the paper's HashMap benchmark (§4.1): entries
+are expensive partial results (here: full KV pages of prompt-prefix
+blocks), guards live long (an entry is pinned while any admission copies
+from it), memory per node is significant (a page), and the entry count is
+bounded with FIFO eviction.  Evicted pages retire through the BlockPool's
+pluggable reclamation policy — reclamation efficiency differences between
+stamp-it and the scan/epoch baselines show up directly as pool pressure.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .block_pool import BlockPool
+
+
+def block_key(tokens: Sequence[int]) -> Tuple[int, ...]:
+    return tuple(int(t) for t in tokens)
+
+
+class PrefixCacheEntry:
+    __slots__ = ("slot", "page", "pins")
+
+    def __init__(self, slot: int, page: int) -> None:
+        self.slot = slot
+        self.page = page
+        self.pins = 0
+
+
+class PrefixCache:
+    """Maps (prefix-hash of a full token block) -> cached page.
+
+    Cached pages are *owned* by the cache (they are not freed when their
+    originating request finishes); admissions COPY matching pages into the
+    new request's own pages (cross-slot aliasing is not possible with
+    per-slot pools — see DESIGN.md).  Eviction is FIFO; pinned entries are
+    skipped until unpinned.
+    """
+
+    def __init__(self, pool: BlockPool, max_entries: int) -> None:
+        self.pool = pool
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
+        self._map: "OrderedDict[Tuple, PrefixCacheEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    # ------------------------------------------------------------------
+    def lookup(self, keys: List[Tuple]) -> List[Optional[PrefixCacheEntry]]:
+        """Pin + return entries for the leading block keys (prefix match
+        stops at the first miss)."""
+        out: List[Optional[PrefixCacheEntry]] = []
+        with self._lock:
+            for key in keys:
+                e = self._map.get(key)
+                if e is None:
+                    self.misses += 1
+                    break
+                e.pins += 1
+                self.hits += 1
+                out.append(e)
+        return out
+
+    def unpin(self, entries: Sequence[PrefixCacheEntry]) -> None:
+        with self._lock:
+            for e in entries:
+                e.pins -= 1
+
+    # ------------------------------------------------------------------
+    def insert(self, key: Tuple, slot: int, page: int) -> bool:
+        """Take ownership of (slot, page) under ``key``.  Returns False if
+        the key is already cached (caller keeps ownership)."""
+        with self._lock:
+            if key in self._map or self.max_entries == 0:
+                return False
+            while len(self._map) >= self.max_entries:
+                evicted = self._evict_one_locked()
+                if not evicted:
+                    return False  # everything pinned; refuse
+            self._map[key] = PrefixCacheEntry(slot, page)
+            return True
+
+    def _evict_one_locked(self) -> bool:
+        for key, e in self._map.items():  # FIFO order
+            if e.pins == 0:
+                del self._map[key]
+                self.pool.free(e.slot, [e.page])  # retire via policy
+                self.evictions += 1
+                return True
+        return False
+
+    def drain(self) -> None:
+        with self._lock:
+            for key, e in list(self._map.items()):
+                if e.pins == 0:
+                    del self._map[key]
+                    self.pool.free(e.slot, [e.page])
+                    self.evictions += 1

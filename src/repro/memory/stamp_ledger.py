@@ -1,0 +1,122 @@
+"""Device-plane stamp ledger — the TPU adaptation of the Stamp Pool.
+
+JAX dispatch is asynchronous: the host enqueues step N+k while the device
+still executes step N, so HBM pages freed "now" may still be read by an
+in-flight step.  The paper's insight transfers directly:
+
+  * every engine step takes a strictly-increasing **stamp** when dispatched
+    (the paper's contended FAA degenerates to a local counter because the
+    per-replica dispatch loop is the single issuer — that serialization is
+    TPU reality, not a simplification);
+  * host-side actors (checkpoint writer, detokenizer, prefix-cache pins)
+    take stamps through the same ledger via ``hold()``;
+  * a retired resource is tagged with ``highest_stamp`` and parked on a
+    stamp-sorted ring; it is recycled once ``lowest_active_stamp`` exceeds
+    its tag — reclamation cost is O(#reclaimable), independent of how many
+    steps/actors are in flight (Prop. 2 at the serving layer).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Optional, Tuple
+
+
+class StampLedger:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._next = 1
+        self._active: Dict[int, str] = {}  # stamp -> tag (debug)
+        self._retired: Deque[Tuple[int, Callable[[], None]]] = deque()
+        # perf counters (serving-layer reclamation-efficiency benchmark)
+        self.retired_total = 0
+        self.reclaimed_total = 0
+        self.scan_steps = 0
+
+    # ------------------------------------------------------------------
+    # stamps
+    # ------------------------------------------------------------------
+    def issue(self, tag: str = "step") -> int:
+        """Issue a stamp and mark it active (a critical-region entry)."""
+        with self._lock:
+            s = self._next
+            self._next += 1
+            self._active[s] = tag
+            return s
+
+    def complete(self, stamp: int) -> None:
+        """Mark a stamp inactive (critical-region exit) and reclaim."""
+        with self._lock:
+            self._active.pop(stamp, None)
+        self.reclaim()
+
+    def highest_stamp(self) -> int:
+        with self._lock:
+            return self._next - 1
+
+    def lowest_active(self) -> int:
+        """Lowest active stamp, or next-to-issue if none are active."""
+        with self._lock:
+            if self._active:
+                return min(self._active)
+            return self._next
+
+    def hold(self, tag: str = "hold") -> "_Hold":
+        """Context manager pinning the current epoch (host-side actor)."""
+        return _Hold(self, tag)
+
+    def unreclaimed(self) -> int:
+        return self.retired_total - self.reclaimed_total
+
+    # ------------------------------------------------------------------
+    # retire / reclaim
+    # ------------------------------------------------------------------
+    def retire(self, on_reclaim: Callable[[], None]) -> int:
+        """Defer ``on_reclaim`` until every current consumer is done.
+
+        Appended stamps are monotone, so the ring stays sorted and
+        ``reclaim`` frees exactly a prefix.
+        """
+        with self._lock:
+            stamp = self._next - 1  # highest assigned
+            self._retired.append((stamp, on_reclaim))
+            self.retired_total += 1
+            return stamp
+
+    def reclaim(self) -> int:
+        callbacks = []
+        with self._lock:
+            lowest = (
+                min(self._active) if self._active else self._next
+            )
+            while self._retired and self._retired[0][0] < lowest:
+                callbacks.append(self._retired.popleft()[1])
+            self.scan_steps += len(callbacks) + (1 if self._retired else 0)
+            self.reclaimed_total += len(callbacks)
+        for cb in callbacks:
+            cb()
+        return len(callbacks)
+
+    def force_expire(self, stamp: int) -> None:
+        """Fault tolerance: drop a dead member's stamp (bounds the paper's
+        reclamation-blocking weakness after a heartbeat timeout)."""
+        with self._lock:
+            self._active.pop(stamp, None)
+        self.reclaim()
+
+
+class _Hold:
+    def __init__(self, ledger: StampLedger, tag: str) -> None:
+        self._ledger = ledger
+        self._tag = tag
+        self.stamp: Optional[int] = None
+
+    def __enter__(self) -> "_Hold":
+        self.stamp = self._ledger.issue(self._tag)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self.stamp is not None:
+            self._ledger.complete(self.stamp)
+            self.stamp = None

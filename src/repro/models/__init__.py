@@ -1,0 +1,13 @@
+from .model import Model
+from .param import (
+    ParamSpec,
+    abstract_params,
+    count_params,
+    init_params,
+    tree_map_specs,
+)
+
+__all__ = [
+    "Model", "ParamSpec", "abstract_params", "count_params", "init_params",
+    "tree_map_specs",
+]

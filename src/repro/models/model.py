@@ -1,0 +1,168 @@
+"""Model facade: one object per architecture config exposing everything the
+launcher, trainer, server, dry-run and tests need.
+
+The dry-run never materializes arrays: ``abstract_params`` /
+``abstract_inputs`` / ``abstract_cache`` return ShapeDtypeStruct trees, and
+the parallel ``*_axes`` trees give logical axes for the sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import transformer as T
+from .param import (
+    ParamSpec,
+    abstract_params,
+    count_params,
+    init_params,
+    tree_map_specs,
+)
+
+#: fixed encoder length for enc-dec *decode* shapes (audio frames; doc'd in
+#: DESIGN.md — the decoder cache, not the encoder, is the scaling axis)
+ENCDEC_DECODE_ENC_LEN = 4096
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.param_specs = T.build_specs(cfg)
+
+    # ------------------------------------------------------------------
+    # Params
+    # ------------------------------------------------------------------
+    def abstract_params(self):
+        return abstract_params(self.param_specs)
+
+    def init_params(self, seed: int = 0):
+        return init_params(self.param_specs, seed)
+
+    def n_params(self) -> int:
+        return count_params(self.param_specs)
+
+    # ------------------------------------------------------------------
+    # Inputs
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, ParamSpec]:
+        """ParamSpec tree for the step inputs of this (arch, shape) cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        ii = jnp.int32
+
+        if shape.kind == "train":
+            if cfg.is_encdec:
+                return {
+                    "enc_embeds": ParamSpec((B, S, cfg.d_model),
+                                            ("batch", None, None),
+                                            dtype=jnp.dtype(cfg.dtype)),
+                    "tokens": ParamSpec((B, S), ("batch", None), dtype=ii,
+                                        init="zeros"),
+                    "labels": ParamSpec((B, S), ("batch", None), dtype=ii,
+                                        init="zeros"),
+                }
+            if cfg.family == "vlm":
+                P = cfg.frontend_positions
+                return {
+                    "frontend_embeds": ParamSpec((B, P, cfg.d_model),
+                                                 ("batch", None, None),
+                                                 dtype=jnp.dtype(cfg.dtype)),
+                    "tokens": ParamSpec((B, S - P), ("batch", None),
+                                        dtype=ii, init="zeros"),
+                    "labels": ParamSpec((B, S - P), ("batch", None),
+                                        dtype=ii, init="zeros"),
+                }
+            return {
+                "tokens": ParamSpec((B, S), ("batch", None), dtype=ii,
+                                    init="zeros"),
+                "labels": ParamSpec((B, S), ("batch", None), dtype=ii,
+                                    init="zeros"),
+            }
+
+        if shape.kind == "prefill":
+            specs = {
+                "tokens": ParamSpec((B, S), ("batch", None), dtype=ii,
+                                    init="zeros")
+            }
+            if cfg.is_encdec:
+                specs["enc_embeds"] = ParamSpec(
+                    (B, S, cfg.d_model), ("batch", None, None),
+                    dtype=jnp.dtype(cfg.dtype))
+            elif cfg.family == "vlm":
+                P = cfg.frontend_positions
+                specs["tokens"] = ParamSpec((B, S - P), ("batch", None),
+                                            dtype=ii, init="zeros")
+                specs["frontend_embeds"] = ParamSpec(
+                    (B, P, cfg.d_model), ("batch", None, None),
+                    dtype=jnp.dtype(cfg.dtype))
+            return specs
+
+        # decode
+        specs = {
+            "tokens": ParamSpec((B, 1), ("batch", None), dtype=ii,
+                                init="zeros"),
+            "lengths": ParamSpec((B,), ("batch",), dtype=ii, init="zeros"),
+        }
+        if self.uses_block_table():
+            mb = -(-S // T.BLOCK_SIZE) + 1
+            specs["block_table"] = ParamSpec((B, mb), ("batch", None),
+                                             dtype=ii, init="zeros")
+        return specs
+
+    def uses_block_table(self) -> bool:
+        layout = T.cache_layout(self.cfg)
+        return layout in ("paged", "hybrid") or self.cfg.is_encdec
+
+    def cache_specs(self, shape: ShapeConfig, pool_slack: int = 0):
+        enc_len = ENCDEC_DECODE_ENC_LEN if self.cfg.is_encdec else 0
+        return T.cache_specs(self.cfg, shape.global_batch, shape.seq_len,
+                             enc_len=enc_len, pool_slack=pool_slack)
+
+    # ------------------------------------------------------------------
+    # Forward entry points
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch, *, constrain=T._id, remat="full"):
+        return T.forward_train(params, batch, self.cfg,
+                               constrain=constrain, remat=remat)
+
+    def prefill(self, params, batch, *, constrain=T._id):
+        return T.forward_prefill(params, batch, self.cfg,
+                                 constrain=constrain)
+
+    def decode_step(self, params, cache, batch):
+        return T.decode_step(params, cache, batch, self.cfg)
+
+    # ------------------------------------------------------------------
+    # Synthetic batches (smoke tests / examples / data pipeline)
+    # ------------------------------------------------------------------
+    def synthetic_batch(self, shape: ShapeConfig, seed: int = 0):
+        cfg = self.cfg
+        specs = self.input_specs(shape)
+
+        def make(path, s: ParamSpec):
+            key = jax.random.PRNGKey(
+                (seed * 9973 + hash(path)) % (2**31)
+            )
+            if s.dtype == jnp.int32:
+                if path == "lengths":
+                    # mid-cache decode position
+                    return jnp.full(s.shape, shape.seq_len // 2, jnp.int32)
+                if path == "block_table":
+                    B, mb = s.shape
+                    return jnp.tile(jnp.arange(mb, dtype=jnp.int32), (B, 1))
+                return jax.random.randint(key, s.shape, 0, cfg.vocab_size,
+                                          jnp.int32)
+            return jax.random.normal(key, s.shape, jnp.float32).astype(
+                s.dtype) * 0.02
+
+        return tree_map_specs(make, specs)
+
+    def init_cache(self, shape: ShapeConfig, seed: int = 0,
+                   pool_slack: int = 0):
+        """Materialized zero cache (smoke tests / serving engine)."""
+        return init_params(self.cache_specs(shape, pool_slack), seed)

@@ -1,0 +1,110 @@
+"""Parameter declaration machinery.
+
+Models declare their parameters once as a pytree of :class:`ParamSpec`
+(shape + dtype + logical axis names + initializer).  From that single
+declaration we derive:
+
+  * ``init_params``      — materialized arrays (for smoke tests / examples)
+  * ``abstract_params``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run: no
+                           allocation, exactly the shannon/kernels pattern)
+  * ``partition_specs``  — ``PartitionSpec`` per param from logical→mesh
+                           axis rules (see :mod:`repro.sharding`)
+
+Logical axis names used across the model zoo:
+  ``layers``   leading stacked-layer axis (scanned)
+  ``embed``    d_model dim (FSDP-shardable)
+  ``heads``    attention-head / head*head_dim dim (tensor-parallel)
+  ``kv_heads`` kv-head dim
+  ``mlp``      feed-forward hidden dim (tensor-parallel)
+  ``vocab``    vocabulary dim (tensor-parallel)
+  ``experts``  MoE expert dim (expert-parallel)
+  ``ssm_inner``/``ssm_state``  Mamba2 inner / state dims
+  ``None``     replicated dim
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[str, ParamSpec], Any], tree, prefix=""):
+    """Map over a nested-dict tree of ParamSpec with path strings."""
+    if is_spec(tree):
+        return fn(prefix, tree)
+    assert isinstance(tree, dict), f"unexpected leaf at {prefix}: {tree!r}"
+    return {
+        k: tree_map_specs(fn, v, f"{prefix}/{k}" if prefix else k)
+        for k, v in tree.items()
+    }
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree — dry-run stand-ins, no device allocation."""
+    return tree_map_specs(
+        lambda path, s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree
+    )
+
+
+def _path_seed(path: str, base: int) -> int:
+    h = hashlib.md5(path.encode()).digest()
+    return (base + int.from_bytes(h[:4], "little")) % (2**31)
+
+
+def init_params(spec_tree, seed: int = 0):
+    """Materialize parameters (smoke tests, examples, real training)."""
+
+    def make(path: str, s: ParamSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        key = jax.random.PRNGKey(_path_seed(path, seed))
+        if s.init == "scaled":  # fan-in scaled
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+            return (
+                jax.random.normal(key, s.shape, jnp.float32) * scale
+            ).astype(s.dtype)
+        return (
+            jax.random.normal(key, s.shape, jnp.float32) * s.scale
+        ).astype(s.dtype)
+
+    return tree_map_specs(make, spec_tree)
+
+
+def logical_axes(spec_tree):
+    """Parallel tree of logical-axis tuples (for sharding rules)."""
+    return tree_map_specs(lambda path, s: s.axes, spec_tree)
+
+
+def count_params(spec_tree) -> int:
+    total = 0
+
+    def add(path, s):
+        nonlocal total
+        total += int(np.prod(s.shape))
+
+    tree_map_specs(add, spec_tree)
+    return total

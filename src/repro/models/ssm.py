@@ -1,0 +1,195 @@
+"""Mamba2 (state-space duality) blocks — used by mamba2-2.7b and the
+zamba2-7b hybrid.
+
+Projections are kept per-component (z / x / B / C / dt) instead of one fused
+in_proj so the tensor-parallel dim (``ssm_inner``) shards cleanly without
+slicing a sharded dimension at non-boundary offsets.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .param import ParamSpec
+
+
+def mamba_specs(cfg: ModelConfig, layers: int) -> Dict[str, ParamSpec]:
+    M = cfg.d_model
+    DI = cfg.ssm_inner
+    H = cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    W = cfg.ssm_conv_width
+    lead = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "wz": ParamSpec(lead + (M, DI), la + ("embed", "ssm_inner"),
+                        init="scaled"),
+        "wx": ParamSpec(lead + (M, DI), la + ("embed", "ssm_inner"),
+                        init="scaled"),
+        "wb": ParamSpec(lead + (M, G * N), la + ("embed", None),
+                        init="scaled"),
+        "wc": ParamSpec(lead + (M, G * N), la + ("embed", None),
+                        init="scaled"),
+        "wdt": ParamSpec(lead + (M, H), la + ("embed", None), init="scaled"),
+        "dt_bias": ParamSpec(lead + (H,), la + (None,), init="zeros"),
+        "a_log": ParamSpec(lead + (H,), la + (None,), init="zeros"),
+        "d_skip": ParamSpec(lead + (H,), la + (None,), init="ones"),
+        "conv_x": ParamSpec(lead + (W, DI), la + ("conv", "ssm_inner"),
+                            init="scaled"),
+        "conv_b": ParamSpec(lead + (W, G * N), la + ("conv", None),
+                            init="scaled"),
+        "conv_c": ParamSpec(lead + (W, G * N), la + ("conv", None),
+                            init="scaled"),
+        "norm": ParamSpec(lead + (DI,), la + ("ssm_inner",), init="ones"),
+        "wo": ParamSpec(lead + (DI, M), la + ("ssm_inner", "embed"),
+                        init="scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (W,C) -> (B,S,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(W):  # W is tiny (4); unrolled shifts, no conv primitive
+        out = out + xp[:, i : i + S, :] * w[i][None, None, :]
+    return out
+
+
+def _conv_step(
+    state: jax.Array, x_new: jax.Array, w: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token conv: state (B,W-1,C), x_new (B,C) -> (out, new_state)."""
+    W = w.shape[0]
+    window = jnp.concatenate([state, x_new[:, None, :]], axis=1)  # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", window, w)
+    return out, window[:, 1:, :]
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                eps: float) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), -1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        y.dtype
+    )
+
+
+def mamba_full(
+    p,
+    xin: jax.Array,  # (B, S, M)
+    cfg: ModelConfig,
+    *,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence Mamba2 block.  Returns (out, cache_slice) where the
+    cache slice carries the final SSM state + conv tails for decode."""
+    B, S, M = xin.shape
+    dt_ = xin.dtype
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    W = cfg.ssm_conv_width
+
+    z = jnp.einsum("bsm,md->bsd", xin, p["wz"].astype(dt_))
+    x = jnp.einsum("bsm,md->bsd", xin, p["wx"].astype(dt_))
+    b = jnp.einsum("bsm,mn->bsn", xin, p["wb"].astype(dt_))
+    c = jnp.einsum("bsm,mn->bsn", xin, p["wc"].astype(dt_))
+    dt = jnp.einsum("bsm,mh->bsh", xin, p["wdt"].astype(dt_))
+
+    x_tail = x[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+        x, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    b_tail = b[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+        b, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    c_tail = c[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+        c, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+
+    x = jax.nn.silu(_causal_conv(x, p["conv_x"].astype(dt_)))
+    b = jax.nn.silu(_causal_conv(b, p["conv_b"].astype(dt_)))
+    c = jax.nn.silu(_causal_conv(c, p["conv_c"].astype(dt_)))
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative
+
+    y, final_state = ops.ssd_chunk_scan(
+        x.reshape(B, S, H, P),
+        dt,
+        a,
+        b.reshape(B, S, G, N),
+        c.reshape(B, S, G, N),
+        chunk=min(cfg.ssm_chunk, S),
+        d_skip=p["d_skip"],
+        init_state=init_state,
+    )
+    y = y.reshape(B, S, H * P)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dm->bsm", y, p["wo"].astype(dt_))
+    cache = {
+        "state": final_state,  # (B, H, P, N) f32
+        "conv_x": x_tail,
+        "conv_b": b_tail,
+        "conv_c": c_tail,
+    }
+    return out, cache
+
+
+def mamba_decode(
+    p,
+    xin: jax.Array,  # (B, 1, M)
+    cfg: ModelConfig,
+    cache: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = xin.shape[0]
+    dt_ = xin.dtype
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    x1 = xin[:, 0]
+
+    z = jnp.einsum("bm,md->bd", x1, p["wz"].astype(dt_))
+    x = jnp.einsum("bm,md->bd", x1, p["wx"].astype(dt_))
+    b = jnp.einsum("bm,mn->bn", x1, p["wb"].astype(dt_))
+    c = jnp.einsum("bm,mn->bn", x1, p["wc"].astype(dt_))
+    dt = jnp.einsum("bm,mh->bh", x1, p["wdt"].astype(dt_))
+
+    x_conv, conv_x = _conv_step(cache["conv_x"], x, p["conv_x"].astype(dt_))
+    b_conv, conv_b = _conv_step(cache["conv_b"], b, p["conv_b"].astype(dt_))
+    c_conv, conv_c = _conv_step(cache["conv_c"], c, p["conv_c"].astype(dt_))
+    x_conv = jax.nn.silu(x_conv)
+    b_conv = jax.nn.silu(b_conv)
+    c_conv = jax.nn.silu(c_conv)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    y, state = ops.ssd_decode_step(
+        x_conv.reshape(B, H, P),
+        dt,
+        a,
+        b_conv.reshape(B, G, N),
+        c_conv.reshape(B, G, N),
+        cache["state"],
+        d_skip=p["d_skip"],
+    )
+    y = y.reshape(B, H * P)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bd,dm->bm", y, p["wo"].astype(dt_))
+    new_cache = {
+        "state": state,
+        "conv_x": conv_x.astype(jnp.float32),
+        "conv_b": conv_b.astype(jnp.float32),
+        "conv_c": conv_c.astype(jnp.float32),
+    }
+    # cast back: the f32 conv-state path must not promote the residual
+    return out[:, None].astype(dt_), new_cache

@@ -1,0 +1,367 @@
+"""Continuous-batching serving engine with stamped page reclamation.
+
+The engine demonstrates the paper's technique as a first-class serving
+feature.  JAX dispatch is asynchronous: up to ``pipeline_depth`` decode
+steps are in flight at once, each holding a **stamp** from the BlockPool's
+ledger between dispatch and host-observed completion.  Pages freed by a
+finished request (or evicted from the prefix cache) are *retired*, not
+reused, until the lowest active stamp passes their retire stamp — with the
+stamp-it policy that reclamation is O(#reclaimable); the epoch/scan/
+refcount policies implement the paper's competitors for the serving-layer
+benchmark.  The reclamation policy must never change MODEL OUTPUTS — only
+pool pressure — which tests/test_engine.py asserts across all policies.
+
+Sampling is on-device (greedy argmax) so the token chain stays in device
+arrays and the host only syncs with pipeline lag, exactly like a
+production TPU serving loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..memory.block_pool import BlockPool, PoolExhausted
+from ..memory.prefix_cache import PrefixCache, block_key
+from ..models import Model
+from ..models.transformer import BLOCK_SIZE, cache_layout
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    # runtime state
+    slot: int = -1
+    generated: Optional[List[int]] = None
+    n_pages: int = 0
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        model: Model,
+        *,
+        max_slots: int = 4,
+        max_seq: int = 256,
+        policy: str = "stamp-it",
+        pipeline_depth: int = 2,
+        prefix_cache_entries: int = 0,
+        extra_pages_per_slot: int = 0,
+        seed: int = 0,
+    ) -> None:
+        cfg = model.cfg
+        assert cache_layout(cfg) == "paged", (
+            "the engine drives paged-layout archs (dense/MoE w/o SWA)"
+        )
+        self.model = model
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.block = BLOCK_SIZE
+        self.mb = -(-max_seq // BLOCK_SIZE) + 1
+        self.pipeline_depth = pipeline_depth
+
+        shape = ShapeConfig("engine", "decode", max_seq, max_slots)
+        self.params = model.init_params(seed)
+        self.cache = model.init_cache(shape, pool_slack=extra_pages_per_slot)
+
+        # page 0 of each slot is the scratch page: inactive slots keep a
+        # zeroed block-table row, so their (discarded) decode writes land
+        # in page 0 instead of corrupting allocated pages.  The host pool
+        # is sized from the DEVICE pool dim (cache_specs may round pages
+        # up for TP divisibility).
+        pool_pages = int(self.cache["layers"]["k_pool"].shape[2])
+        self.pool = BlockPool(max_slots, pool_pages, policy=policy)
+        for s in range(max_slots):
+            got = self.pool.alloc(s, 1)
+            assert got == [0], "page 0 must be the scratch page"
+        self.prefix_cache = PrefixCache(self.pool, prefix_cache_entries)
+
+        # host mirrors
+        self.block_table = np.zeros((max_slots, self.mb), np.int32)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        self.free_slots: List[int] = list(range(max_slots))
+        self.active: Dict[int, Request] = {}  # slot -> request
+
+        # device-resident token chain (one per slot)
+        self.tokens_dev = jnp.zeros((max_slots, 1), jnp.int32)
+
+        self.waiting: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self._inflight: Deque[Tuple[int, Any, Dict[int, Request], np.ndarray]]
+        self._inflight = deque()
+        self._next_rid = 0
+        self.steps = 0
+
+        # ---- jitted device functions ----
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._prefill_cache: Dict[int, Any] = {}
+        self._loader = jax.jit(self._load_fn, donate_argnums=(0,))
+        self._copier = jax.jit(self._copy_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # jitted bodies
+    # ------------------------------------------------------------------
+    def _decode_fn(self, params, cache, tokens, lengths, table):
+        logits, new_cache = self.model.decode_step(
+            params, cache,
+            {"tokens": tokens, "lengths": lengths, "block_table": table},
+        )
+        new_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_tokens[:, None], new_cache
+
+    def _prefill_fn(self, params, tokens, last_index):
+        return self.model.prefill(
+            params, {"tokens": tokens, "last_index": last_index}
+        )
+
+    def _load_fn(self, cache, k, v, slot, pages):
+        """Scatter prefill KV (L,1,S,Hkv,D) into this slot's pages."""
+        L = k.shape[0]
+        S = k.shape[2]
+        nb = S // self.block
+        kp = cache["layers"]["k_pool"]
+        kr = k.reshape(L, nb, self.block, k.shape[3], k.shape[4])
+        vr = v.reshape(L, nb, self.block, k.shape[3], k.shape[4])
+        kp = kp.at[:, slot, pages].set(kr.astype(kp.dtype))
+        vp = cache["layers"]["v_pool"].at[:, slot, pages].set(
+            vr.astype(kp.dtype)
+        )
+        return dict(cache, layers=dict(
+            cache["layers"], k_pool=kp, v_pool=vp))
+
+    def _copy_fn(self, cache, src_slots, src_pages, dst_slot, dst_pages):
+        kp = cache["layers"]["k_pool"]
+        vp = cache["layers"]["v_pool"]
+        kp = kp.at[:, dst_slot, dst_pages].set(kp[:, src_slots, src_pages])
+        vp = vp.at[:, dst_slot, dst_pages].set(vp[:, src_slots, src_pages])
+        return dict(cache, layers=dict(cache["layers"], k_pool=kp,
+                                       v_pool=vp))
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(self._next_rid, list(map(int, prompt)),
+                      max_new_tokens, eos_id)
+        req.submitted_at = time.time()
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.waiting or self.active or self._inflight):
+            self.step()
+            if self.steps > max_steps:  # pragma: no cover
+                raise RuntimeError("engine did not converge")
+        return self.finished
+
+    # ------------------------------------------------------------------
+    # engine step
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        self.steps += 1
+        # 1. retire the oldest in-flight step if the pipeline is full
+        while len(self._inflight) >= self.pipeline_depth:
+            self._complete_oldest()
+        # 2. admissions
+        while self.waiting and self.free_slots:
+            if not self._admit(self.waiting[0]):
+                break
+            self.waiting.popleft()
+        # 3. dispatch one decode step for the active slots
+        if self.active:
+            self._dispatch_decode()
+        elif self._inflight:
+            self._complete_oldest()
+
+    def drain(self) -> None:
+        while self._inflight:
+            self._complete_oldest()
+        self.prefix_cache.drain()
+        self.pool.ledger.reclaim()
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request) -> bool:
+        slot = self.free_slots[-1]
+        prompt = req.prompt
+        n_blocks = max(-(-len(prompt) // self.block), 1)
+        # prefix-cache lookup over full prompt blocks
+        keys = [
+            block_key(prompt[: (i + 1) * self.block])
+            for i in range(len(prompt) // self.block)
+        ]
+        hits = self.prefix_cache.lookup(keys) if keys else []
+        try:
+            pages = self.pool.alloc(slot, n_blocks)
+        except PoolExhausted:
+            self.prefix_cache.unpin(hits)
+            return False
+        self.free_slots.pop()
+
+        # keep at least the final prompt token out of the "hit" span so a
+        # fully-cached prompt still runs one forced step to emit token 1
+        n_hit_tokens = min(len(hits) * self.block, len(prompt) - 1)
+        if hits:
+            self.cache = self._copier(
+                self.cache,
+                jnp.asarray([e.slot for e in hits], jnp.int32),
+                jnp.asarray([e.page for e in hits], jnp.int32),
+                slot,
+                jnp.asarray(pages[: len(hits)], jnp.int32),
+            )
+        self.prefix_cache.unpin(hits)
+
+        table_row = np.zeros((self.mb,), np.int32)
+        table_row[:n_blocks] = pages
+        self.block_table[slot] = table_row
+        self.slot_pages[slot] = list(pages)
+        req.slot = slot
+        req.generated = []
+        req.n_pages = n_blocks
+
+        suffix = prompt[n_hit_tokens:]
+        if n_hit_tokens and len(suffix) <= 2 * self.block:
+            # short suffix after a cache hit: teacher-force through decode
+            self.lengths[slot] = n_hit_tokens
+            self.active[slot] = req
+            req._tf_suffix = list(suffix)  # type: ignore[attr-defined]
+        else:
+            # classic prefill (padded to a block multiple)
+            pad = n_blocks * self.block - len(prompt)
+            toks = np.asarray(prompt + [0] * pad, np.int32)[None]
+            S = toks.shape[1]
+            if S not in self._prefill_cache:
+                self._prefill_cache[S] = jax.jit(self._prefill_fn)
+            logits, kv = self._prefill_cache[S](
+                self.params, jnp.asarray(toks),
+                jnp.asarray([len(prompt) - 1], jnp.int32),
+            )
+            self.cache = self._loader(
+                self.cache, kv["k"], kv["v"], slot,
+                jnp.asarray(pages, jnp.int32),
+            )
+            first = int(jnp.argmax(logits[0]))
+            req.generated.append(first)
+            self.lengths[slot] = len(prompt)
+            self.active[slot] = req
+            self.tokens_dev = self.tokens_dev.at[slot, 0].set(first)
+            req._tf_suffix = []  # type: ignore[attr-defined]
+        return True
+
+    # ------------------------------------------------------------------
+    def _dispatch_decode(self) -> None:
+        # grow page allocations where the next write crosses a block edge
+        for slot, req in self.active.items():
+            need = self.lengths[slot] // self.block + 1
+            while req.n_pages < min(need, self.mb):
+                try:
+                    (page,) = self.pool.alloc(slot, 1)
+                except PoolExhausted:
+                    # back-pressure: force-sync everything, retry once
+                    while self._inflight:
+                        self._complete_oldest()
+                    (page,) = self.pool.alloc(slot, 1)
+                self.block_table[slot, req.n_pages] = page
+                self.slot_pages[slot].append(page)
+                req.n_pages += 1
+
+        # teacher-forced suffix tokens (prefix-cache admissions) override
+        # the sampled token chain for their slots
+        tokens = self.tokens_dev
+        for slot, req in self.active.items():
+            tf = getattr(req, "_tf_suffix", [])
+            if tf:
+                tokens = tokens.at[slot, 0].set(tf.pop(0))
+
+        page_refs = [
+            (slot, p)
+            for slot, req in self.active.items()
+            for p in self.slot_pages[slot]
+        ]
+        stamp = self.pool.begin_step(page_refs)
+        lengths = jnp.asarray(self.lengths, jnp.int32)
+        table = jnp.asarray(self.block_table, jnp.int32)
+        new_tokens, self.cache = self._decode(
+            self.params, self.cache, tokens, lengths, table
+        )
+        self.tokens_dev = new_tokens
+        active_snapshot = dict(self.active)
+        self._inflight.append(
+            (stamp, new_tokens, active_snapshot, self.lengths.copy())
+        )
+        for slot in self.active:
+            self.lengths[slot] += 1
+
+    # ------------------------------------------------------------------
+    def _complete_oldest(self) -> None:
+        if not self._inflight:
+            return
+        stamp, tokens_dev, active, lengths_snap = self._inflight.popleft()
+        tokens = np.asarray(jax.device_get(tokens_dev))  # sync point
+        self.pool.complete_step(stamp)
+        for slot, req in active.items():
+            if req.done:
+                continue
+            # this step consumed the token at position lengths_snap[slot];
+            # its output is a real sample only past the prompt
+            pos = int(lengths_snap[slot])
+            if pos + 1 < len(req.prompt):
+                continue  # teacher-forcing internal step
+            tok = int(tokens[slot, 0])
+            req.generated.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                self._finish(slot, req)
+
+    def _finish(self, slot: int, req: Request) -> None:
+        req.done = True
+        req.finished_at = time.time()
+        self.finished.append(req)
+        del self.active[slot]
+        # donate full prompt blocks to the prefix cache; free the rest
+        pages = self.slot_pages[slot]
+        donated = set()
+        for i in range(len(req.prompt) // self.block):
+            key = block_key(req.prompt[: (i + 1) * self.block])
+            if i < len(pages) and self.prefix_cache.insert(
+                key, slot, pages[i]
+            ):
+                donated.add(pages[i])
+        to_free = [p for p in pages if p not in donated]
+        if to_free:
+            self.pool.free(slot, to_free)
+        self.slot_pages[slot] = []
+        self.block_table[slot] = 0
+        self.lengths[slot] = 0
+        self.free_slots.append(slot)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "steps": self.steps,
+            "finished": len(self.finished),
+            "pool_unreclaimed": self.pool.unreclaimed(),
+            "pool_freed": self.pool.freed_total,
+            "pool_scan_steps": self.pool.scan_steps,
+            "ledger_scan_steps": self.pool.ledger.scan_steps,
+            "prefix_hits": self.prefix_cache.hits,
+            "prefix_misses": self.prefix_cache.misses,
+            "prefix_evictions": self.prefix_cache.evictions,
+        }

@@ -1,0 +1,23 @@
+"""Host-side sampling utilities (the engine's device path is greedy; these
+are for examples wanting temperature/top-k on final logits)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample(logits: np.ndarray, *, temperature: float = 0.0,
+           top_k: int = 0, rng: np.random.RandomState | None = None) -> int:
+    logits = np.asarray(logits, np.float64)
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    logits = logits / temperature
+    if top_k:
+        idx = np.argpartition(logits, -top_k)[-top_k:]
+        mask = np.full_like(logits, -np.inf)
+        mask[idx] = logits[idx]
+        logits = mask
+    p = np.exp(logits - logits.max())
+    p /= p.sum()
+    rng = rng or np.random.RandomState()
+    return int(rng.choice(len(p), p=p))

@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+A *rule set* maps logical axis names (see :mod:`repro.models.param`) to mesh
+axes.  Different execution kinds (train / prefill / decode) use different
+rule sets; the multi-pod mesh adds a leading ``pod`` axis that joins the
+batch/FSDP product for training and acts as an extra data axis for serving.
+
+Hardware model (TPU v5e target): ``model`` axis = fast intra-pod ICI ring for
+tensor parallelism; ``data`` = FSDP/batch axis; ``pod`` = inter-pod (slower
+links) so only batch-gradient all-reduces cross it by default.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .models.param import logical_axes, tree_map_specs
+
+Rules = Dict[Optional[str], Union[None, str, Tuple[str, ...]]]
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+#: training: 2D-sharded weights (tensor dims over `model`, FSDP over `data`),
+#: batch over (pod, data); optimizer states inherit param specs.
+TRAIN_RULES: Rules = {
+    "layers": None,
+    "embed": "data",       # FSDP dim
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "data",     # expert-parallel shares the FSDP axis
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "batch": ("pod", "data"),
+    "blocks": "model",     # KV pages striped over the TP axis
+    "window": "model",     # rolling (SWA) cache ring
+    "kv_seq": "model",     # contiguous / cross-attention cache
+    "ssm_heads": "model",
+    None: None,
+}
+
+#: serving: weights tensor-parallel only (replicated over data/pod so each
+#: data row serves its own requests), KV/state sharded (batch, heads).
+SERVE_RULES: Rules = {
+    "layers": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "data",     # EP for MoE serving
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "batch": ("pod", "data"),
+    "blocks": "model",
+    "window": "model",
+    "kv_seq": "model",
+    "ssm_heads": "model",
+    None: None,
+}
+
+#: activation/batch logical axes
+BATCH_AXES_TRAIN = ("pod", "data")
+BATCH_AXES_SERVE = ("pod", "data")
+
+
+def mesh_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _resolve(axis: Optional[str], rules: Rules, mesh: Mesh):
+    tgt = rules.get(axis, None)
+    if tgt is None:
+        return None
+    names = mesh_axis_names(mesh)
+    if isinstance(tgt, tuple):
+        present = tuple(t for t in tgt if t in names)
+        return present if present else None
+    return tgt if tgt in names else None
+
+
+def spec_for_axes(
+    axes: Sequence[Optional[str]],
+    rules: Rules,
+    mesh: Mesh,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Build a PartitionSpec from logical axes, dropping conflicts.
+
+    A mesh axis may appear at most once in a PartitionSpec; later logical
+    axes that resolve to an already-used mesh axis are replicated instead.
+    If ``shape`` is given, dims that do not divide evenly by the mesh axis
+    size are replicated (e.g. qwen2's 14 heads or mixtral's 8 experts on a
+    16-way axis) — the other dims of the same tensor still shard.
+    """
+    used = set()
+    parts = []
+    for i, ax in enumerate(axes):
+        tgt = _resolve(ax, rules, mesh)
+        if tgt is None:
+            parts.append(None)
+            continue
+        flat = tgt if isinstance(tgt, tuple) else (tgt,)
+        flat = tuple(t for t in flat if t not in used)
+        if shape is not None:
+            size = 1
+            for t in flat:
+                size *= mesh.shape[t]
+            if size == 0 or shape[i] % max(size, 1) != 0:
+                parts.append(None)
+                continue
+        if not flat:
+            parts.append(None)
+        elif len(flat) == 1:
+            used.add(flat[0])
+            parts.append(flat[0])
+        else:
+            used.update(flat)
+            parts.append(flat)
+    return P(*parts)
+
+
+def param_partition_specs(spec_tree, rules: Rules, mesh: Mesh):
+    """PartitionSpec tree for a ParamSpec tree under the given rules."""
+    return tree_map_specs(
+        lambda path, s: spec_for_axes(s.axes, rules, mesh, s.shape), spec_tree
+    )
+
+
+def param_shardings(spec_tree, rules: Rules, mesh: Mesh):
+    return tree_map_specs(
+        lambda path, s: NamedSharding(
+            mesh, spec_for_axes(s.axes, rules, mesh, s.shape)
+        ),
+        spec_tree,
+    )
+
+
+def batch_spec(
+    mesh: Mesh, kind: str = "train", extra: int = 0, global_batch: int = 0
+) -> P:
+    """PartitionSpec for a (batch, ...) activation.
+
+    Greedily shards the batch over as many of the (pod, data) axes as its
+    size divides — e.g. global_batch=1 (long_500k) replicates, 32 uses both
+    axes on the 2x16x16 mesh.
+    """
+    names = mesh_axis_names(mesh)
+    axes = BATCH_AXES_TRAIN if kind == "train" else BATCH_AXES_SERVE
+    chosen = []
+    rem = global_batch if global_batch else 1 << 30
+    for a in axes:
+        if a in names and rem % mesh.shape[a] == 0:
+            chosen.append(a)
+            rem //= mesh.shape[a]
+    first = (
+        tuple(chosen) if len(chosen) > 1 else (chosen[0] if chosen else None)
+    )
+    return P(first, *([None] * extra))
+
+
+def divisible_batch(global_batch: int, mesh: Mesh, kind: str) -> bool:
+    names = mesh_axis_names(mesh)
+    axes = BATCH_AXES_TRAIN if kind == "train" else BATCH_AXES_SERVE
+    n = 1
+    for a in axes:
+        if a in names:
+            n *= mesh.shape[a]
+    return global_batch % n == 0
+
+
+def rules_for(kind: str) -> Rules:
+    return TRAIN_RULES if kind == "train" else SERVE_RULES

@@ -1,0 +1,166 @@
+"""Trainer: checkpointed, fault-tolerant training loop.
+
+Wires together the step builder (pjit train step with 2D sharding + SP
+constraints), the stamp-guarded data pipeline, async checkpointing and the
+fault-tolerance hooks:
+
+  * **checkpoint/restart** — periodic async saves; ``resume()`` restores
+    the newest complete checkpoint (onto ANY mesh — elastic rescale).
+  * **failure injection** — ``failure_hook(step)`` may raise; the loop
+    restores and replays from the last checkpoint (the data pipeline is
+    deterministic in step, so replays are bit-identical).
+  * **straggler mitigation** — a watchdog flags steps exceeding the
+    deadline (on a real pod this triggers backup dispatch; here it is
+    recorded and surfaced in metrics).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..data.pipeline import SyntheticDataPipeline
+from ..memory.stamp_ledger import StampLedger
+from ..models import Model, init_params
+from .checkpoint import CheckpointManager
+from .optimizer import AdamWConfig, opt_state_specs
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        shape: ShapeConfig,
+        mesh,
+        *,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 50,
+        remat: str = "full",
+        adamw: Optional[AdamWConfig] = None,
+        seed: int = 0,
+        step_deadline_s: float = 0.0,
+        failure_hook: Optional[Callable[[int], None]] = None,
+    ) -> None:
+        self.model = model
+        self.shape = shape
+        self.mesh = mesh
+        self.ledger = StampLedger()
+        self.ckpt = (
+            CheckpointManager(ckpt_dir, ledger=self.ledger)
+            if ckpt_dir else None
+        )
+        self.ckpt_every = ckpt_every
+        self.step_deadline_s = step_deadline_s
+        self.failure_hook = failure_hook
+        self.stragglers: list[int] = []
+
+        from ..launch.steps import build_train_step  # lazy: avoids cycle
+
+        self.fn, _, (self.p_shard, self.o_shard, self.b_shard) = (
+            build_train_step(model, shape, mesh, remat=remat, adamw=adamw)
+        )
+        with mesh:
+            self.params = jax.device_put(model.init_params(seed),
+                                         self.p_shard)
+            self.opt_state = jax.device_put(
+                init_params(opt_state_specs(model.param_specs)),
+                self.o_shard,
+            )
+        self.step = 0
+        self.seed = seed
+        self.history: list[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def resume(self) -> bool:
+        if not self.ckpt:
+            return False
+        state, step = self.ckpt.restore(
+            shardings={"params": self.p_shard, "opt": self.o_shard}
+        )
+        if state is None:
+            return False
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        self.step = step + 1
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, *, max_restarts: int = 2) -> Dict[str, Any]:
+        restarts = 0
+        while True:
+            try:
+                self._run_inner(n_steps)
+                break
+            except _InjectedFailure:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                restored = self.resume()
+                if not restored:  # no checkpoint yet: restart from scratch
+                    with self.mesh:
+                        self.params = jax.device_put(
+                            self.model.init_params(self.seed), self.p_shard)
+                        self.opt_state = jax.device_put(
+                            init_params(opt_state_specs(
+                                self.model.param_specs)), self.o_shard)
+                    self.step = 0
+        if self.ckpt:
+            self.ckpt.wait()
+        return {
+            "final_step": self.step,
+            "restarts": restarts,
+            "stragglers": list(self.stragglers),
+            "history": self.history,
+        }
+
+    def _run_inner(self, n_steps: int) -> None:
+        pipeline = SyntheticDataPipeline(
+            self.model.cfg, self.shape, seed=self.seed,
+            ledger=self.ledger, start_step=self.step,
+        )
+        try:
+            while self.step < n_steps:
+                if self.failure_hook:
+                    self.failure_hook(self.step)
+                batch_np = pipeline.next()
+                with self.mesh:
+                    batch = jax.device_put(batch_np, self.b_shard)
+                    stamp = self.ledger.issue("train-step")
+                    t0 = time.time()
+                    self.params, self.opt_state, metrics = self.fn(
+                        self.params, self.opt_state, batch
+                    )
+                    loss = float(metrics["loss"])  # sync point
+                    dt = time.time() - t0
+                    self.ledger.complete(stamp)
+                if self.step_deadline_s and dt > self.step_deadline_s:
+                    self.stragglers.append(self.step)
+                self.history.append(
+                    {"step": self.step, "loss": loss, "time_s": dt}
+                )
+                if self.ckpt and (self.step + 1) % self.ckpt_every == 0:
+                    self.ckpt.save(self.step, {
+                        "params": self.params, "opt": self.opt_state,
+                    })
+                self.step += 1
+        finally:
+            pipeline.stop()
+
+
+class _InjectedFailure(RuntimeError):
+    """Raised by failure hooks to simulate a node crash."""
+
+
+def inject_failure_at(steps) -> Callable[[int], None]:
+    fired = set()
+
+    def hook(step: int) -> None:
+        if step in steps and step not in fired:
+            fired.add(step)
+            raise _InjectedFailure(f"simulated node failure at step {step}")
+
+    return hook

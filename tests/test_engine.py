@@ -1,0 +1,161 @@
+"""Serving-engine end-to-end tests: output correctness against a model-
+level reference decode, invariance across reclamation policies, prefix
+cache reuse, and pool reclamation behaviour under async dispatch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ShapeConfig, smoke_config
+from repro.models import Model
+from repro.models.transformer import BLOCK_SIZE
+from repro.serving import ServingEngine
+
+MAX_SEQ = 512
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(smoke_config(ARCHS["qwen2-0.5b"]))
+
+
+def reference_generate(model, prompt, max_new):
+    """Model-level greedy decode (contiguous positions, paged cache)."""
+    shape = ShapeConfig("ref", "decode", MAX_SEQ, 1)
+    params = model.init_params(0)
+    cache = model.init_cache(shape)
+    mb = cache["layers"]["k_pool"].shape[2]
+    logits, kv = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}
+    )
+    # place prefill kv into pages 0..nb-1 (identity table)
+    S = len(prompt)
+    nb = -(-S // BLOCK_SIZE)
+    pad = nb * BLOCK_SIZE - S
+    k = jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    L = k.shape[0]
+    kr = k.reshape(L, 1, nb, BLOCK_SIZE, k.shape[3], k.shape[4])
+    cache["layers"]["k_pool"] = (
+        cache["layers"]["k_pool"].at[:, :, :nb].set(
+            kr.astype(cache["layers"]["k_pool"].dtype))
+    )
+    vr = v.reshape(L, 1, nb, BLOCK_SIZE, v.shape[3], v.shape[4])
+    cache["layers"]["v_pool"] = (
+        cache["layers"]["v_pool"].at[:, :, :nb].set(
+            vr.astype(cache["layers"]["v_pool"].dtype))
+    )
+    table = jnp.tile(jnp.arange(mb, dtype=jnp.int32), (1, 1)).reshape(1, mb)
+    out = [int(jnp.argmax(logits[0]))]
+    tok = out[0]
+    length = S
+    for _ in range(max_new - 1):
+        logits, cache = model.decode_step(params, cache, {
+            "tokens": jnp.asarray([[tok]], jnp.int32),
+            "lengths": jnp.asarray([length], jnp.int32),
+            "block_table": table,
+        })
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+        length += 1
+    return out
+
+
+def make_prompts(n, lo=8, hi=200, seed=3):
+    rs = np.random.RandomState(seed)
+    return [
+        list(rs.randint(1, 500, rs.randint(lo, hi)).astype(int))
+        for _ in range(n)
+    ]
+
+
+def test_engine_matches_reference(model):
+    prompts = make_prompts(3)
+    want = [reference_generate(model, p, 6) for p in prompts]
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        pipeline_depth=2)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run_until_done()
+    eng.drain()
+    got = {r.rid: r.generated for r in done}
+    assert len(done) == 3
+    for i in range(3):
+        assert got[i] == want[i], f"request {i}: {got[i]} != {want[i]}"
+
+
+@pytest.mark.parametrize("policy", ["stamp-it", "epoch", "scan", "refcount"])
+def test_policy_invariance(model, policy):
+    """Reclamation policy may change pool pressure, never outputs."""
+    prompts = make_prompts(4, seed=7)
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ, policy=policy,
+                        pipeline_depth=2, extra_pages_per_slot=2)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    done = sorted(eng.run_until_done(), key=lambda r: r.rid)
+    eng.drain()
+    tokens = [r.generated for r in done]
+    # compare against the stamp-it run (first parametrization caches it)
+    key = tuple(map(tuple, tokens))
+    ref = _POLICY_REFERENCE.setdefault("tokens", key)
+    assert key == ref
+    # after drain, stamp-it / scan / refcount fully reclaim
+    if policy != "epoch":  # epoch needs two more grace periods by design
+        assert eng.pool.unreclaimed() == 0, eng.stats()
+
+
+_POLICY_REFERENCE = {}
+
+
+def test_slot_reuse_under_pressure(model):
+    """More requests than slots; pages must cycle through reclamation."""
+    prompts = make_prompts(8, lo=100, hi=300, seed=11)
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        pipeline_depth=3)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4)
+    done = eng.run_until_done()
+    assert len(done) == 8
+    eng.drain()
+    assert eng.pool.unreclaimed() == 0
+    assert eng.pool.freed_total > 0
+
+
+def test_prefix_cache_reuse(model):
+    """A repeated long prompt must hit the cache and give identical
+    output."""
+    rs = np.random.RandomState(5)
+    prompt = list(rs.randint(1, 500, 2 * BLOCK_SIZE + 7).astype(int))
+    want = reference_generate(model, prompt, 5)
+
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        prefix_cache_entries=8, extra_pages_per_slot=6)
+    r1 = eng.submit(prompt, max_new_tokens=5)
+    eng.run_until_done()
+    assert eng.prefix_cache.hits == 0
+    r2 = eng.submit(prompt, max_new_tokens=5)
+    eng.run_until_done()
+    eng.drain()
+    assert r1.generated == want
+    assert r2.generated == want, (r2.generated, want)
+    assert eng.prefix_cache.hits >= 2  # both full blocks hit
+
+
+def test_ledger_blocks_reuse_while_inflight(model):
+    """Pages freed while steps are in flight must not be reclaimed until
+    those steps complete (the async-dispatch hazard)."""
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        pipeline_depth=3)
+    eng.submit(make_prompts(1, lo=150, hi=151, seed=13)[0],
+               max_new_tokens=3)
+    eng.submit(make_prompts(1, lo=150, hi=151, seed=14)[0],
+               max_new_tokens=12)
+    saw_deferred = False
+    while eng.waiting or eng.active or eng._inflight:
+        eng.step()
+        if eng.pool.unreclaimed() > 0 and eng._inflight:
+            saw_deferred = True
+    eng.drain()
+    assert saw_deferred, "expected retired-but-not-reclaimed pages"
+    assert eng.pool.unreclaimed() == 0

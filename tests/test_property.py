@@ -1,0 +1,135 @@
+"""Hypothesis property tests for the system's core invariants.
+
+Host plane: arbitrary sequential interleavings of Stamp Pool operations and
+reclaimer retire/region schedules must preserve the paper's invariants.
+(Concurrent interleavings are covered by the stress tests; sequential
+property tests catch logic errors deterministically and shrink.)
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (
+    NOT_IN_LIST,
+    PENDING_PUSH,
+    make_reclaimer,
+)
+from repro.core.interface import ReclaimableNode
+from repro.core.stamp_pool import Block, StampPool
+
+
+# ---------------------------------------------------------------------------
+# Stamp Pool: random push/remove schedules
+# ---------------------------------------------------------------------------
+@settings(max_examples=200, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.booleans(), st.integers(min_value=0, max_value=7)),
+        min_size=1,
+        max_size=120,
+    )
+)
+def test_stamp_pool_random_schedule(ops):
+    """Any sequential schedule of push/remove keeps every invariant."""
+    pool = StampPool()
+    blocks = [Block(f"b{i}") for i in range(8)]
+    in_pool: dict[int, int] = {}  # idx -> stamp
+    last_assigned = 0
+    for is_push, idx in ops:
+        if is_push and idx not in in_pool:
+            stamp = pool.push(blocks[idx])
+            assert stamp > last_assigned, "stamps must strictly increase"
+            last_assigned = stamp
+            in_pool[idx] = stamp
+            assert pool.highest_stamp() >= stamp
+        elif not is_push and idx in in_pool:
+            my = in_pool.pop(idx)
+            was_lowest = not in_pool or my < min(in_pool.values())
+            was_last = pool.remove(blocks[idx])
+            assert was_last == was_lowest
+            flags = blocks[idx].stamp.load() & (PENDING_PUSH | NOT_IN_LIST)
+            assert flags == NOT_IN_LIST
+        # global invariants after every op
+        lo = pool.lowest_stamp()
+        if in_pool:
+            assert lo <= min(in_pool.values()), (
+                "tail stamp overtook an in-pool stamp (unsafe!)"
+            )
+        pool.check_quiescent_invariants()
+        chain_blocks = pool.prev_chain()[1:-1]
+        assert {id(b) for b in chain_blocks} == {
+            id(blocks[i]) for i in in_pool
+        }
+
+
+# ---------------------------------------------------------------------------
+# Reclaimer: retire/region schedules never free early & eventually free all
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(
+    scheme=st.sampled_from(
+        ["stamp-it", "er", "ner", "qsr", "hpr", "lfrc", "debra", "ibr"]
+    ),
+    schedule=st.lists(
+        st.sampled_from(["enter", "leave", "retire"]), min_size=1, max_size=80
+    ),
+)
+def test_reclaimer_schedule_safety(scheme, schedule):
+    """Single-threaded schedules: a node retired inside a region must not be
+    freed before the region closes (schemes may only free once no region
+    could still reference it); after quiescence everything is freed."""
+    r = make_reclaimer(scheme, max_threads=8)
+    depth = 0
+    live_in_region: list[ReclaimableNode] = []
+    with r.thread_context():
+        for op in schedule:
+            if op == "enter":
+                r._region_enter()
+                depth += 1
+            elif op == "leave" and depth > 0:
+                r._region_leave()
+                depth -= 1
+                if depth == 0:
+                    live_in_region.clear()
+            elif op == "retire":
+                node = ReclaimableNode()
+                r.on_allocate(node)
+                if depth == 0:
+                    with r.region_guard():
+                        r.retire(node)
+                else:
+                    r.retire(node)
+                    live_in_region.append(node)
+        while depth > 0:
+            r._region_leave()
+            depth -= 1
+        # drive quiescence
+        for _ in range(400):
+            with r.region_guard():
+                pass
+        r.flush()
+        st_ = r.stats()
+        assert st_["unreclaimed"] == 0, (scheme, st_)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    keys=st.lists(st.integers(min_value=0, max_value=30), max_size=60),
+)
+def test_list_set_matches_model(keys):
+    """List-based set behaves like a Python set under any op sequence."""
+    from repro.core.ds import HarrisMichaelListSet
+
+    r = make_reclaimer("stamp-it")
+    s = HarrisMichaelListSet(r)
+    model = set()
+    with r.thread_context():
+        for i, k in enumerate(keys):
+            if i % 3 == 2:
+                assert s.remove(k) == (k in model)
+                model.discard(k)
+            else:
+                assert s.insert(k) == (k not in model)
+                model.add(k)
+            assert s.contains(k) == (k in model)
+        assert s.size() == len(model)

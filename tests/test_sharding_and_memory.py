@@ -1,0 +1,163 @@
+"""Unit tests: sharding rules (divisibility fallbacks, batch greedy
+sharding), StampLedger, BlockPool policies, PrefixCache, HLO parser."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import sharding as SH
+from repro.memory import BlockPool, PoolExhausted, PrefixCache, StampLedger
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+class FakeMesh:
+    """Just enough Mesh surface for the rule helpers."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_spec_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 14 heads don't divide 16 -> replicated; embed dim shards
+    spec = SH.spec_for_axes(("embed", "heads", None), SH.TRAIN_RULES, mesh,
+                            (896, 14, 64))
+    assert spec == P("data", None, None)
+    # 32 heads divide -> sharded
+    spec = SH.spec_for_axes(("embed", "heads", None), SH.TRAIN_RULES, mesh,
+                            (4096, 32, 128))
+    assert spec == P("data", "model", None)
+
+
+def test_spec_axis_conflict_resolution():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # blocks takes `model`; kv_heads must then replicate (one use per axis)
+    spec = SH.spec_for_axes(
+        ("layers", "batch", "blocks", None, "kv_heads", None),
+        SH.SERVE_RULES, mesh, (40, 128, 272, 128, 8, 128),
+    )
+    assert spec[2] == "model"
+    assert spec[4] is None
+
+
+def test_batch_spec_greedy():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert SH.batch_spec(mesh, "serve", 0, 128)[0] == ("pod", "data")
+    assert SH.batch_spec(mesh, "serve", 0, 1)[0] is None
+    # 16 divides pod(2) then 8 doesn't divide data(16) -> pod only
+    assert SH.batch_spec(mesh, "serve", 0, 16)[0] == "pod"
+
+
+# ---------------------------------------------------------------------------
+# StampLedger
+# ---------------------------------------------------------------------------
+def test_ledger_ordering_and_reclaim():
+    led = StampLedger()
+    freed = []
+    s1 = led.issue("step1")
+    led.retire(lambda: freed.append("a"))  # stamped at highest == s1
+    assert led.reclaim() == 0  # s1 still active
+    s2 = led.issue("step2")
+    led.complete(s1)
+    # a retired at stamp s1; lowest active now s2 > s1 -> freed
+    assert freed == ["a"]
+    led.retire(lambda: freed.append("b"))
+    led.complete(s2)
+    assert freed == ["a", "b"]
+    assert led.unreclaimed() == 0
+
+
+def test_ledger_hold_blocks_reclaim():
+    led = StampLedger()
+    freed = []
+    with led.hold("pin"):
+        led.retire(lambda: freed.append("x"))
+        led.reclaim()
+        assert freed == []
+    led.reclaim()
+    assert freed == ["x"]
+
+
+def test_ledger_force_expire():
+    led = StampLedger()
+    freed = []
+    dead = led.issue("dead-node")
+    led.retire(lambda: freed.append("y"))
+    led.reclaim()
+    assert freed == []
+    led.force_expire(dead)  # heartbeat timeout
+    assert freed == ["y"]
+
+
+# ---------------------------------------------------------------------------
+# BlockPool policies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["stamp-it", "epoch", "scan", "refcount"])
+def test_pool_defers_reuse_until_step_completes(policy):
+    pool = BlockPool(1, 8, policy=policy)
+    pages = pool.alloc(0, 4)
+    stamp = pool.begin_step([(0, p) for p in pages])
+    pool.free(0, pages)  # freed while the step is in flight
+    # stamp-it/scan/refcount must NOT hand them out yet
+    if policy in ("stamp-it", "scan", "refcount"):
+        assert pool.free_slot_pages(0) == 4, policy
+    pool.complete_step(stamp)
+    if policy == "epoch":
+        # two grace periods: run two empty steps
+        for _ in range(2):
+            s = pool.begin_step([])
+            pool.complete_step(s)
+    assert pool.free_slot_pages(0) == 8, policy
+    assert pool.unreclaimed() == 0
+
+
+def test_pool_exhaustion_reports_pending():
+    pool = BlockPool(1, 4, policy="stamp-it")
+    pages = pool.alloc(0, 4)
+    stamp = pool.begin_step([(0, p) for p in pages])
+    pool.free(0, pages)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(0, 2)
+    pool.complete_step(stamp)
+    assert pool.alloc(0, 2)
+
+
+def test_prefix_cache_fifo_and_pins():
+    pool = BlockPool(1, 10, policy="stamp-it")
+    cache = PrefixCache(pool, max_entries=2)
+    pages = pool.alloc(0, 3)
+    assert cache.insert(("a",), 0, pages[0])
+    assert cache.insert(("b",), 0, pages[1])
+    hits = cache.lookup([("a",)])
+    assert len(hits) == 1
+    # inserting a third evicts FIFO-first unpinned ("b", since "a" pinned)
+    assert cache.insert(("c",), 0, pages[2])
+    assert ("b",) not in cache._map and ("a",) in cache._map
+    cache.unpin(hits)
+    assert cache.evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# HLO parser
+# ---------------------------------------------------------------------------
+def test_hlo_program_stats_counts_scan_trips():
+    from repro.launch import hlo_stats
+
+    import jax.numpy as jnp
+
+    def scanned(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    x = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    hlo = jax.jit(scanned).lower(x, w).compile().as_text()
+    stats = hlo_stats.program_stats(hlo)
+    want = 2 * 8 * 64 * 256 * 256  # 8 unrolled matmuls
+    assert abs(stats["flops"] - want) / want < 0.01, stats["flops"]
