@@ -1,9 +1,17 @@
 """Amortized-O(1) experiment (paper Prop. 2): reclamation work (retire-list
 nodes touched + cross-thread scans) per reclaimed node, as thread count
 grows.  Stamp-it's cost stays ~constant; HP/ER/QSR scale with thread count
-(they scan all threads' state)."""
+(they scan all threads' state).
+
+``run_ledger`` transplants the same experiment onto the serving-layer
+StampLedger: reclamation work per operation as the number of concurrently
+*active* stamps (in-flight engine steps + host-actor holds) grows.  The
+monotone-queue lowest-active structure keeps the per-op cost flat; the
+pre-PR ``min()``-scan implementation scaled linearly with active stamps."""
 
 from __future__ import annotations
+
+from repro.memory.stamp_ledger import StampLedger
 
 from . import queue_bench
 from .harness import run_trial
@@ -24,4 +32,28 @@ def run(schemes, thread_counts, seconds):
                 "scan_steps_per_reclaimed": scans / reclaimed,
                 "reclaimed": reclaimed,
             })
+    return rows
+
+
+def run_ledger(active_counts=(1, 16, 256, 4096), ops: int = 2000):
+    """Ledger-plane Prop. 2: retire/reclaim cost per op with N stamps
+    pinned active (simulating N in-flight steps / host holds)."""
+    rows = []
+    for n_active in active_counts:
+        led = StampLedger()
+        pins = [led.issue("pin") for _ in range(n_active)]
+        base = led.scan_steps
+        for i in range(ops):
+            s = led.issue("step")
+            led.retire(lambda: None)
+            led.complete(s)  # reclaim runs here; pins block the ring
+        work = led.scan_steps - base
+        for p in pins:
+            led.force_expire(p)
+        rows.append({
+            "bench": "reclaim_cost_ledger", "scheme": "stamp-ledger",
+            "active_stamps": n_active,
+            "scan_steps_per_op": round(work / ops, 4),
+            "reclaimed_after_expire": led.reclaimed_total,
+        })
     return rows

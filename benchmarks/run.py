@@ -71,8 +71,11 @@ def main() -> None:
     # Prop. 2
     emit(reclaim_cost.run(SCHEMES, threads, seconds),
          "scan_steps_per_reclaimed", "reclaimed")
-    # beyond-paper: serving layer
-    emit(serving_bench.run(), "time_s", "peak_unreclaimed_pages")
+    # Prop. 2 at the serving-layer ledger (flat vs. #active stamps)
+    emit(reclaim_cost.run_ledger(), "scan_steps_per_op", "active_stamps")
+    # beyond-paper: serving layer (also refreshes BENCH_serving.json)
+    emit(serving_bench.run(write_json=True), "steps_per_s",
+         "peak_unreclaimed_pages")
 
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)

@@ -1,16 +1,26 @@
-"""Serving-layer reclamation benchmark (beyond-paper, device plane).
+"""Serving-layer reclamation + hot-path benchmark (beyond-paper, device
+plane).
 
 Drives the ServingEngine with a stream of requests under each BlockPool
-policy and measures (a) page-reclamation latency pressure (unreclaimed
-pages over engine steps), (b) bookkeeping work (scan steps), and
-(c) throughput sanity (identical outputs are asserted in tests).  This is
-the paper's comparison transplanted onto KV-cache page reclamation under
-asynchronous TPU dispatch.
+policy and measures (a) decode throughput (steps/sec), (b) host-side
+bookkeeping overhead per step, (c) ledger/pool bookkeeping work
+(scan steps), and (d) page-reclamation latency pressure (unreclaimed
+pages over engine steps).  A ``stamp-it-legacy`` row runs the same engine
+with ``legacy_host_sync=True`` — the pre-optimization hot path that
+re-uploads ``lengths``/``block_table`` every step, blocks on the first
+sampled token at admission, and sweeps the full block table — so the
+device-resident rewrite's win is measured, not asserted
+(``speedup_vs_legacy`` on the stamp-it row).
+
+``python -m benchmarks.serving_bench`` writes ``BENCH_serving.json`` at
+the repo root: the serving-perf trajectory baseline for future PRs.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -18,36 +28,110 @@ from repro.configs import ARCHS, smoke_config
 from repro.models import Model
 from repro.serving import ServingEngine
 
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
-def run(policies=("stamp-it", "epoch", "scan", "refcount"),
-        n_requests: int = 10, max_new: int = 4, seed: int = 0):
-    model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
-    rs = np.random.RandomState(seed)
-    prompts = [
-        list(rs.randint(1, 500, rs.randint(100, 300)).astype(int))
-        for _ in range(n_requests)
-    ]
-    rows = []
-    for policy in policies:
-        eng = ServingEngine(model, max_slots=2, max_seq=512, policy=policy,
-                            pipeline_depth=3, extra_pages_per_slot=2)
+
+def _drive(model, prompts, *, policy, legacy, max_new, warmup_prompts,
+           max_seq, repeats=3):
+    eng = ServingEngine(model, max_slots=4, max_seq=max_seq, policy=policy,
+                        pipeline_depth=3, extra_pages_per_slot=2,
+                        legacy_host_sync=legacy)
+    # warm the prefill/decode compile caches so the timed section measures
+    # the steady-state hot path, not XLA compilation
+    for p in warmup_prompts:
+        eng.submit(p, max_new_tokens=max_new)
+    eng.run_until_done()
+    eng.drain()
+
+    # best-of-N timed passes: OS scheduling noise swamps a single short
+    # pass; the minimum wall time is the standard microbenchmark
+    # estimator.  Every reported metric is a per-pass delta from the
+    # SAME (best) pass — mixing lifetime counters with best-pass steps
+    # would skew scans-per-step ratios whenever repeats/warmup change.
+    best = None
+    for _ in range(repeats):
+        st0 = eng.stats()
+        peak = 0
         for p in prompts:
             eng.submit(p, max_new_tokens=max_new)
         t0 = time.perf_counter()
-        peak = 0
         while eng.waiting or eng.active or eng._inflight:
             eng.step()
             peak = max(peak, eng.pool.unreclaimed())
         dt = time.perf_counter() - t0
         eng.drain()
-        st = eng.stats()
-        rows.append({
-            "bench": "serving_pool", "policy": policy,
-            "steps": st["steps"], "time_s": round(dt, 3),
-            "peak_unreclaimed_pages": peak,
-            "final_unreclaimed": eng.pool.unreclaimed(),
-            "bookkeeping_scans": st["pool_scan_steps"]
-            + st["ledger_scan_steps"],
-            "pages_recycled": st["pool_freed"],
-        })
+        st1 = eng.stats()
+        d = {k: st1[k] - st0[k] for k in
+             ("steps", "pool_scan_steps", "ledger_scan_steps",
+              "pool_freed", "backpressure_syncs")}
+        host_us = (
+            (st1["host_us_per_step"] * st1["steps"]
+             - st0["host_us_per_step"] * st0["steps"])
+            / max(d["steps"], 1)
+        )
+        if best is None or dt < best[0]:
+            best = (dt, d, host_us, peak)
+    dt, d, host_us, peak = best
+    return {
+        "bench": "serving_pool",
+        "policy": policy + ("-legacy" if legacy else ""),
+        "steps": d["steps"],
+        "time_s": round(dt, 3),
+        "steps_per_s": round(d["steps"] / dt, 2),
+        "host_us_per_step": round(host_us, 2),
+        "peak_unreclaimed_pages": peak,
+        "final_unreclaimed": eng.pool.unreclaimed(),
+        "ledger_scan_steps": d["ledger_scan_steps"],
+        "bookkeeping_scans": d["pool_scan_steps"]
+        + d["ledger_scan_steps"],
+        "pages_recycled": d["pool_freed"],
+        "backpressure_syncs": d["backpressure_syncs"],
+    }
+
+
+def run(policies=("stamp-it", "epoch", "scan", "refcount"),
+        n_requests: int = 16, max_new: int = 32, seed: int = 0,
+        max_seq: int = 2048, with_legacy: bool = True,
+        write_json: bool = False):
+    """Decode-heavy chat-shaped workload on the production-shaped cell:
+    ``max_seq=2048`` makes the block table 17 pages wide, so the legacy
+    full-table sweep touches ~8-17x the pages the bucketed bound does for
+    these 40-200-token prompts — the hot-path cost this PR removes."""
+    model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
+    rs = np.random.RandomState(seed)
+    prompts = [
+        list(rs.randint(1, 500, rs.randint(40, 200)).astype(int))
+        for _ in range(n_requests)
+    ]
+    # warmup covers every prefill bucket (1, 2 blocks) and every decode
+    # n_kv bucket the timed prompts can reach, so the timed section is
+    # pure steady-state (no XLA compiles)
+    warmup = [
+        list(rs.randint(1, 500, n).astype(int))
+        for n in (50, 120, 160, 199)
+    ]
+    rows = []
+    for policy in policies:
+        rows.append(_drive(model, prompts, policy=policy, legacy=False,
+                           max_new=max_new, warmup_prompts=warmup,
+                           max_seq=max_seq))
+    if with_legacy:
+        # pre-PR hot path, stamp-it policy: the speedup denominator
+        legacy = _drive(model, prompts, policy="stamp-it", legacy=True,
+                        max_new=max_new, warmup_prompts=warmup,
+                        max_seq=max_seq)
+        rows.append(legacy)
+        for r in rows:
+            if r["policy"] == "stamp-it":
+                r["speedup_vs_legacy"] = round(
+                    r["steps_per_s"] / legacy["steps_per_s"], 2
+                )
+    if write_json:
+        BENCH_JSON.write_text(json.dumps(rows, indent=1))
     return rows
+
+
+if __name__ == "__main__":
+    for row in run(write_json=True):
+        print(json.dumps(row))
+    print(f"# wrote {BENCH_JSON}")

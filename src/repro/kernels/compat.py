@@ -1,0 +1,45 @@
+"""Version compatibility shims for Pallas TPU APIs.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+resolve whichever spelling this jax provides so the kernels lower on both
+the container's jax and current TPU releases.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "pallas tpu exposes neither CompilerParams nor TPUCompilerParams"
+    )
+
+# jax.shard_map graduated from jax.experimental.shard_map, and its
+# replication-check kwarg was renamed check_rep -> check_vma
+try:
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on jax version
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect
+
+_SHARD_MAP_KWS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_KWS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` fallback: psum(1) over the axis (folded to a
+    constant by XLA) on jax versions that predate it."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

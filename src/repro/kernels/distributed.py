@@ -23,7 +23,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import Mesh, PartitionSpec as P
+
+from .compat import axis_size, shard_map
 
 NEG_INF = -1e30
 
@@ -59,7 +62,7 @@ def _partial_flash(q, k, v, pos, valid):
 def _shard_body(q, k_loc, v_loc, table, lengths, k1, v1, *,
                 axis: str, block: int):
     idx = jax.lax.axis_index(axis)
-    n_shards = jax.lax.axis_size(axis)
+    n_shards = axis_size(axis)
     B = q.shape[0]
     mb_loc = k_loc.shape[1]
     barange = jnp.arange(B)
@@ -134,7 +137,7 @@ def paged_attention_dist(
     other = tuple(a for a in mesh.axis_names
                   if a != axis and a != bp
                   and not (isinstance(bp, tuple) and a in bp))
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -222,7 +225,7 @@ def _moe_body(x, router, wi_gate, wi_up, wo, *, cfg, axis: str):
     out = jnp.zeros((B, S, M), dt).at[b_ix, sorted_tok].add(contrib)
 
     # single reduction of the COMBINED activations
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     if S % n == 0 and S > 1:
         return jax.lax.psum_scatter(out, axis, scatter_dimension=1,
                                     tiled=True)
@@ -239,7 +242,7 @@ def moe_block_dist(p, x, cfg, *, mesh: Mesh, batch_part, axis: str = "model"):
     sp = S % n == 0 and S > 1
     body = ft.partial(_moe_body, cfg=cfg, axis=axis)
     bp = batch_part
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -305,7 +308,7 @@ def rolling_attention_dist(q, k_cache, v_cache, lengths, k1, v1, *,
     bp = batch_part
     spec = P(bp, axis, None, None)
     body = functools.partial(_rolling_body, axis=axis, W=W)
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(bp, None, None), spec, spec, P(bp),

@@ -93,14 +93,18 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
 
 
 def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
+                    n_kv: Optional[int] = None,
                     impl: Optional[str] = None):
+    """``n_kv`` statically bounds the KV-page sweep (see the Pallas
+    kernel's docstring); ``None`` sweeps the full table width."""
     mode = _impl(impl)
     if mode == "ref":
-        return ref.paged_attention(q, k_pool, v_pool, block_table, lengths)
+        return ref.paged_attention(q, k_pool, v_pool, block_table, lengths,
+                                   n_kv=n_kv)
     from .paged_attention import paged_attention_pallas
 
     return paged_attention_pallas(
-        q, k_pool, v_pool, block_table, lengths,
+        q, k_pool, v_pool, block_table, lengths, n_kv=n_kv,
         interpret=(mode == "interpret"),
     )
 

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -112,7 +114,7 @@ def decode_attention_pallas(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -130,8 +132,17 @@ def paged_attention_pallas(
     block_table: jax.Array,  # (B, max_blocks) int32 (local page ids)
     lengths: jax.Array,      # (B,) int32
     *,
+    n_kv: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
+    """``n_kv`` (static) bounds the KV sweep: the grid iterates only the
+    first ``n_kv`` table columns instead of all ``max_blocks``.  Callers
+    pass a bucketed bound >= ceil(max(lengths)/block); positions past a
+    sequence's length are masked to NEG_INF either way, so any valid bound
+    is bit-identical to the full sweep — it just skips pages no active
+    sequence can reach."""
+    if n_kv is not None and n_kv < block_table.shape[1]:
+        block_table = block_table[:, :n_kv]
     B, H, D = q.shape
     _, n_pool, block, Hkv, _ = k_pool.shape
     max_blocks = block_table.shape[1]
@@ -172,7 +183,7 @@ def paged_attention_pallas(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -155,6 +155,8 @@ def paged_attention(
     v_pool: jax.Array,       # (B, N_blocks, block, Hkv, D)
     block_table: jax.Array,  # (B, max_blocks) int32 — local page ids
     lengths: jax.Array,      # (B,) int32
+    *,
+    n_kv: Optional[int] = None,
 ) -> jax.Array:
     """Oracle: gather the pages then run decode attention.
 
@@ -163,7 +165,13 @@ def paged_attention(
     DESIGN.md), so the gather never crosses shards.  The Pallas kernel
     streams pages HBM->VMEM without materializing the gathered cache;
     numerics are identical.
+
+    ``n_kv`` (static) bounds the sweep to the first ``n_kv`` table columns;
+    past-length positions mask to exp-underflow zero either way, so any
+    bound >= ceil(max(lengths)/block) is bit-identical to the full sweep.
     """
+    if n_kv is not None and n_kv < block_table.shape[1]:
+        block_table = block_table[:, :n_kv]
     B, H, D = q.shape
     block = k_pool.shape[2]
     Hkv = k_pool.shape[3]

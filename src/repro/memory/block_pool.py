@@ -133,8 +133,10 @@ class BlockPool:
     # ------------------------------------------------------------------
     def free(self, slot: int, pages: Sequence[int]) -> None:
         if self.policy == "stamp-it":
-            for p in list(pages):
-                self.ledger.retire(self._make_release(slot, p))
+            # one ledger lock acquisition for the whole batch (retire_many)
+            self.ledger.retire_many(
+                [self._make_release(slot, p) for p in pages]
+            )
             self.ledger.reclaim()
             return
         with self._lock:

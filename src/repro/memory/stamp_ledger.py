@@ -14,13 +14,23 @@ in-flight step.  The paper's insight transfers directly:
     stamp-sorted ring; it is recycled once ``lowest_active_stamp`` exceeds
     its tag — reclamation cost is O(#reclaimable), independent of how many
     steps/actors are in flight (Prop. 2 at the serving layer).
+
+Lowest-active tracking mirrors the paper's doubly-linked Stamp Pool with a
+structure that exploits the single-issuer property: stamps are issued in
+monotone order, so the active set is an issue-ordered queue with lazy
+deletion.  ``lowest_active`` pops completed stamps off the front; each
+stamp is enqueued once and dequeued once, so the cost is amortized O(1)
+per issue/complete — there is no ``min()`` over the active set anywhere on
+the reclaim path.  ``scan_steps`` counts every queue-front pop plus every
+retire-ring inspection, so the amortized-O(1) claim is *observable* (and
+asserted in tests/test_sharding_and_memory.py).
 """
 
 from __future__ import annotations
 
 import threading
 from collections import deque
-from typing import Any, Callable, Deque, Dict, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, Iterable, Optional, Tuple
 
 
 class StampLedger:
@@ -28,6 +38,9 @@ class StampLedger:
         self._lock = threading.Lock()
         self._next = 1
         self._active: Dict[int, str] = {}  # stamp -> tag (debug)
+        # issue-ordered queue + lazy deletion: front is the lowest active
+        # stamp after popping completed entries (amortized O(1))
+        self._issue_q: Deque[int] = deque()
         self._retired: Deque[Tuple[int, Callable[[], None]]] = deque()
         # perf counters (serving-layer reclamation-efficiency benchmark)
         self.retired_total = 0
@@ -43,24 +56,55 @@ class StampLedger:
             s = self._next
             self._next += 1
             self._active[s] = tag
+            self._issue_q.append(s)
             return s
 
     def complete(self, stamp: int) -> None:
         """Mark a stamp inactive (critical-region exit) and reclaim."""
         with self._lock:
             self._active.pop(stamp, None)
+            self._maybe_compact_locked()
         self.reclaim()
 
     def highest_stamp(self) -> int:
         with self._lock:
             return self._next - 1
 
+    def _lowest_active_locked(self) -> int:
+        """Lowest active stamp (or next-to-issue when none are active).
+
+        Pops completed stamps off the issue-ordered queue front; every
+        stamp transits the queue exactly once, so the aggregate cost over
+        any operation sequence is O(#issued) — amortized O(1), with no
+        scan over the active set.  Each pop is charged to ``scan_steps``.
+        """
+        q = self._issue_q
+        while q and q[0] not in self._active:
+            q.popleft()
+            self.scan_steps += 1
+        return q[0] if q else self._next
+
+    def _maybe_compact_locked(self) -> None:
+        """Bound queue memory when a long-lived hold pins the front.
+
+        Front pops alone would retain one entry per stamp issued while
+        the hold is active; once dead entries outnumber live ones the
+        queue is rebuilt (order-preserving), so memory stays O(#active)
+        and each stamp still leaves the queue exactly once — the
+        compaction cost amortizes against the >=half entries removed.
+        """
+        q = self._issue_q
+        if len(q) > 2 * len(self._active) + 8:
+            removed = len(q) - len(self._active)
+            self._issue_q = deque(
+                s for s in q if s in self._active
+            )
+            self.scan_steps += removed
+
     def lowest_active(self) -> int:
         """Lowest active stamp, or next-to-issue if none are active."""
         with self._lock:
-            if self._active:
-                return min(self._active)
-            return self._next
+            return self._lowest_active_locked()
 
     def hold(self, tag: str = "hold") -> "_Hold":
         """Context manager pinning the current epoch (host-side actor)."""
@@ -84,12 +128,28 @@ class StampLedger:
             self.retired_total += 1
             return stamp
 
+    def retire_many(
+        self, on_reclaim: Iterable[Callable[[], None]]
+    ) -> int:
+        """Batch retire: one lock acquisition for a whole page batch.
+
+        All callbacks are tagged with the same (current highest) stamp, so
+        the ring stays sorted; counters advance exactly as if ``retire``
+        had been called per element.
+        """
+        with self._lock:
+            stamp = self._next - 1
+            n = 0
+            for cb in on_reclaim:
+                self._retired.append((stamp, cb))
+                n += 1
+            self.retired_total += n
+            return stamp
+
     def reclaim(self) -> int:
         callbacks = []
         with self._lock:
-            lowest = (
-                min(self._active) if self._active else self._next
-            )
+            lowest = self._lowest_active_locked()
             while self._retired and self._retired[0][0] < lowest:
                 callbacks.append(self._retired.popleft()[1])
             self.scan_steps += len(callbacks) + (1 if self._retired else 0)

@@ -158,12 +158,15 @@ def attention_decode(
     lengths: jax.Array,  # (B,) tokens already in cache
     *,
     block_table: Optional[jax.Array] = None,  # (B, max_blocks) for paged
+    n_kv: Optional[int] = None,  # static bound on the paged KV sweep
     use_rope: bool = True,
     cross: bool = False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Single-token decode against a KV cache (contiguous/paged/rolling).
 
     Cross-attention decode reads a fixed cache and writes nothing.
+    ``n_kv`` bounds the paged-attention page sweep (local path only; the
+    context-parallel distributed path always sweeps its stripe).
     """
     B, S1, M = x.shape
     assert S1 == 1
@@ -212,7 +215,7 @@ def attention_decode(
         k_pool = cache["k_pool"].at[barange, page, slot].set(k1)
         v_pool = cache["v_pool"].at[barange, page, slot].set(v1)
         out = ops.paged_attention(
-            q1, k_pool, v_pool, block_table, lengths + 1
+            q1, k_pool, v_pool, block_table, lengths + 1, n_kv=n_kv
         )
         new_cache = dict(cache, k_pool=k_pool, v_pool=v_pool)
     elif cfg.sliding_window and cache["k"].shape[1] == cfg.sliding_window:

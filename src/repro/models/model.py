@@ -134,8 +134,10 @@ class Model:
         return T.forward_prefill(params, batch, self.cfg,
                                  constrain=constrain)
 
-    def decode_step(self, params, cache, batch):
-        return T.decode_step(params, cache, batch, self.cfg)
+    def decode_step(self, params, cache, batch, *, n_kv=None):
+        """``n_kv`` (static int) bounds the paged-attention KV sweep to the
+        first ``n_kv`` block-table columns (serving hot path)."""
+        return T.decode_step(params, cache, batch, self.cfg, n_kv=n_kv)
 
     # ------------------------------------------------------------------
     # Synthetic batches (smoke tests / examples / data pipeline)

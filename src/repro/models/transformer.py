@@ -504,11 +504,13 @@ def forward_prefill(params, batch, cfg: ModelConfig, *,
 # ---------------------------------------------------------------------------
 # Decode steps
 # ---------------------------------------------------------------------------
-def decode_step(params, cache, batch, cfg: ModelConfig):
+def decode_step(params, cache, batch, cfg: ModelConfig, *,
+                n_kv: Optional[int] = None):
     """One token for every sequence in the batch against the cache.
 
     ``batch``: {"tokens": (B,1) int32, "lengths": (B,) int32,
                 "block_table": (B, MB) int32 (paged layouts only)}
+    ``n_kv`` (static) bounds the paged KV sweep (see kernels/ops.py).
     Returns (logits (B, V), new_cache).
     """
     lengths = batch["lengths"]
@@ -523,7 +525,7 @@ def decode_step(params, cache, batch, cfg: ModelConfig):
             a, new_self = L.attention_decode(
                 lp["self_attn"], a_in, cfg,
                 {"k_pool": cl["sk"], "v_pool": cl["sv"]}, lengths,
-                block_table=block_table)
+                block_table=block_table, n_kv=n_kv)
             h = h + a
             x_in = L.apply_norm(lp["norm_x"], h, cfg)
             xa, _ = L.attention_decode(
@@ -569,7 +571,7 @@ def decode_step(params, cache, batch, cfg: ModelConfig):
             a_in = L.apply_norm(shared["norm1"], h, cfg)
             a, new_ac = L.attention_decode(
                 shared["attn"], a_in, cfg, acl, lengths,
-                block_table=block_table)
+                block_table=block_table, n_kv=n_kv)
             h = h + a
             m_in = L.apply_norm(shared["norm2"], h, cfg)
             h = h + L.apply_mlp(shared["mlp"], m_in, cfg)
@@ -600,7 +602,8 @@ def decode_step(params, cache, batch, cfg: ModelConfig):
             lp, cl = xs
             a_in = L.apply_norm(lp["norm1"], h, cfg)
             a, new_c = L.attention_decode(lp["attn"], a_in, cfg, cl,
-                                          lengths, block_table=block_table)
+                                          lengths, block_table=block_table,
+                                          n_kv=n_kv)
             h = h + a
             m_in = L.apply_norm(lp["norm2"], h, cfg)
             if cfg.family == "moe":

@@ -11,9 +11,18 @@ refcount policies implement the paper's competitors for the serving-layer
 benchmark.  The reclamation policy must never change MODEL OUTPUTS — only
 pool pressure — which tests/test_engine.py asserts across all policies.
 
-Sampling is on-device (greedy argmax) so the token chain stays in device
-arrays and the host only syncs with pipeline lag, exactly like a
-production TPU serving loop.
+Hot-path design (docs/serving_hot_path.md): the decode loop is **sync-free
+and device-resident**.  ``lengths``, ``block_table``, the active mask and
+the sampled-token chain live as device arrays mutated by small jitted ops
+at admission / page-growth / finish time; the per-step dispatch uploads
+NOTHING host->device and never blocks on device results (the only sync
+point is retiring the oldest in-flight step once the pipeline is full —
+exactly like a production TPU serving loop).  Prefill shapes are bucketed
+to powers of two so the prefill compile cache stays O(log max_seq), and
+the decode sweep is bounded by the bucketed maximum active page count
+(``n_kv``) rather than the full table width.  ``legacy_host_sync=True``
+restores the pre-optimization per-step upload + blocking-admission path so
+benchmarks/serving_bench.py can measure the win.
 """
 
 from __future__ import annotations
@@ -33,6 +42,11 @@ from ..memory.block_pool import BlockPool, PoolExhausted
 from ..memory.prefix_cache import PrefixCache, block_key
 from ..models import Model
 from ..models.transformer import BLOCK_SIZE, cache_layout
+
+
+def _pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (n - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -62,6 +76,7 @@ class ServingEngine:
         prefix_cache_entries: int = 0,
         extra_pages_per_slot: int = 0,
         seed: int = 0,
+        legacy_host_sync: bool = False,
     ) -> None:
         cfg = model.cfg
         assert cache_layout(cfg) == "paged", (
@@ -74,6 +89,7 @@ class ServingEngine:
         self.block = BLOCK_SIZE
         self.mb = -(-max_seq // BLOCK_SIZE) + 1
         self.pipeline_depth = pipeline_depth
+        self.legacy_host_sync = legacy_host_sync
 
         shape = ShapeConfig("engine", "decode", max_seq, max_slots)
         self.params = model.init_params(seed)
@@ -91,15 +107,22 @@ class ServingEngine:
             assert got == [0], "page 0 must be the scratch page"
         self.prefix_cache = PrefixCache(self.pool, prefix_cache_entries)
 
-        # host mirrors
+        # host mirrors (bookkeeping only — never uploaded on the hot path)
         self.block_table = np.zeros((max_slots, self.mb), np.int32)
         self.lengths = np.zeros((max_slots,), np.int32)
         self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
         self.free_slots: List[int] = list(range(max_slots))
         self.active: Dict[int, Request] = {}  # slot -> request
 
-        # device-resident token chain (one per slot)
+        # device plane: mutated in place by jitted ops, read every step
         self.tokens_dev = jnp.zeros((max_slots, 1), jnp.int32)
+        self.lengths_dev = jnp.zeros((max_slots,), jnp.int32)
+        self.table_dev = jnp.zeros((max_slots, self.mb), jnp.int32)
+        self.mask_dev = jnp.zeros((max_slots,), jnp.int32)
+
+        # page-ref cache: rebuilt only when the active page set changes
+        self._page_refs: List[tuple] = []
+        self._refs_dirty = True
 
         self.waiting: Deque[Request] = deque()
         self.finished: List[Request] = []
@@ -107,37 +130,57 @@ class ServingEngine:
         self._inflight = deque()
         self._next_rid = 0
         self.steps = 0
+        self.host_ns = 0  # host-side bookkeeping time in _dispatch_decode
+        self.backpressure_syncs = 0  # PoolExhausted -> force-sync events
 
         # ---- jitted device functions ----
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        # n_kv is static: one compile per power-of-two page-sweep bucket
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1, 3),
+                               static_argnums=(6,))
         self._prefill_cache: Dict[int, Any] = {}
-        self._loader = jax.jit(self._load_fn, donate_argnums=(0,))
+        self._loader = jax.jit(self._load_fn, donate_argnums=(0,),
+                               static_argnums=(4,))
         self._copier = jax.jit(self._copy_fn, donate_argnums=(0,))
+        # NOTE: the token chain is never donated — in-flight pipeline
+        # entries keep references to it for their completion device_get
+        self._admit_dev = jax.jit(self._admit_fn,
+                                  donate_argnums=(0, 1, 2))
+        self._grow_dev = jax.jit(self._grow_fn, donate_argnums=(0,))
+        self._tf_dev = jax.jit(self._tf_fn)
+        self._reset_dev = jax.jit(self._reset_fn,
+                                  donate_argnums=(0, 1, 2))
 
     # ------------------------------------------------------------------
     # jitted bodies
     # ------------------------------------------------------------------
-    def _decode_fn(self, params, cache, tokens, lengths, table):
+    def _decode_fn(self, params, cache, tokens, lengths, table, mask, n_kv):
+        """One decode step; lengths advance on-device for active slots."""
         logits, new_cache = self.model.decode_step(
             params, cache,
             {"tokens": tokens, "lengths": lengths, "block_table": table},
+            n_kv=n_kv,
         )
         new_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return new_tokens[:, None], new_cache
+        return new_tokens[:, None], new_cache, lengths + mask
 
     def _prefill_fn(self, params, tokens, last_index):
-        return self.model.prefill(
+        logits, kv = self.model.prefill(
             params, {"tokens": tokens, "last_index": last_index}
         )
+        # sample on-device: the host never syncs on prefill logits
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first[0], kv
 
-    def _load_fn(self, cache, k, v, slot, pages):
-        """Scatter prefill KV (L,1,S,Hkv,D) into this slot's pages."""
+    def _load_fn(self, cache, k, v, slot, nb, pages):
+        """Scatter prefill KV (L,1,S,Hkv,D) into this slot's pages.
+
+        ``nb`` (static) trims the power-of-two prefill bucket back to the
+        pages actually allocated for the prompt."""
         L = k.shape[0]
-        S = k.shape[2]
-        nb = S // self.block
+        S = nb * self.block
         kp = cache["layers"]["k_pool"]
-        kr = k.reshape(L, nb, self.block, k.shape[3], k.shape[4])
-        vr = v.reshape(L, nb, self.block, k.shape[3], k.shape[4])
+        kr = k[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
+        vr = v[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
         kp = kp.at[:, slot, pages].set(kr.astype(kp.dtype))
         vp = cache["layers"]["v_pool"].at[:, slot, pages].set(
             vr.astype(kp.dtype)
@@ -152,6 +195,37 @@ class ServingEngine:
         vp = vp.at[:, dst_slot, dst_pages].set(vp[:, src_slots, src_pages])
         return dict(cache, layers=dict(cache["layers"], k_pool=kp,
                                        v_pool=vp))
+
+    def _admit_fn(self, lengths, table, mask, tokens,
+                  slot, length_val, row, first, set_first):
+        """Admission: install the slot's device state in one dispatch."""
+        lengths = lengths.at[slot].set(length_val)
+        table = table.at[slot].set(row)
+        mask = mask.at[slot].set(1)
+        cur = tokens[slot, 0]
+        tokens = tokens.at[slot, 0].set(
+            jnp.where(set_first != 0, first, cur)
+        )
+        return lengths, table, mask, tokens
+
+    def _grow_fn(self, table, slots, idxs, pages):
+        """Batched block-table growth (fixed-width scatter).
+
+        Padding entries carry slot == max_slots: out-of-bounds scatter
+        updates are dropped by JAX, so pads cannot clobber real writes
+        (a duplicate in-bounds pad index would — scatter applies updates
+        in order, and a pad's stale read would win)."""
+        return table.at[slots, idxs].set(pages)
+
+    def _tf_fn(self, tokens, slots, vals):
+        """Batched teacher-forced token override (same OOB-pad scheme)."""
+        return tokens.at[slots, 0].set(vals)
+
+    def _reset_fn(self, lengths, table, mask, slot):
+        lengths = lengths.at[slot].set(0)
+        table = table.at[slot].set(jnp.zeros((self.mb,), jnp.int32))
+        mask = mask.at[slot].set(0)
+        return lengths, table, mask
 
     # ------------------------------------------------------------------
     # public API
@@ -232,8 +306,11 @@ class ServingEngine:
         table_row[:n_blocks] = pages
         self.block_table[slot] = table_row
         self.slot_pages[slot] = list(pages)
+        self._refs_dirty = True
         req.slot = slot
         req.generated = []
+        req._first_dev = None  # type: ignore[attr-defined]
+
         req.n_pages = n_blocks
 
         suffix = prompt[n_hit_tokens:]
@@ -242,69 +319,167 @@ class ServingEngine:
             self.lengths[slot] = n_hit_tokens
             self.active[slot] = req
             req._tf_suffix = list(suffix)  # type: ignore[attr-defined]
+            length_val, first, set_first = n_hit_tokens, 0, 0
         else:
-            # classic prefill (padded to a block multiple)
-            pad = n_blocks * self.block - len(prompt)
+            # classic prefill, bucketed to a power-of-two block count so
+            # the compile cache is O(log(max_seq/block)) instead of one
+            # entry per distinct prompt-block count
+            nb_bucket = _pow2_bucket(n_blocks)
+            S = nb_bucket * self.block
+            pad = S - len(prompt)
             toks = np.asarray(prompt + [0] * pad, np.int32)[None]
-            S = toks.shape[1]
             if S not in self._prefill_cache:
                 self._prefill_cache[S] = jax.jit(self._prefill_fn)
-            logits, kv = self._prefill_cache[S](
+            first_dev, kv = self._prefill_cache[S](
                 self.params, jnp.asarray(toks),
                 jnp.asarray([len(prompt) - 1], jnp.int32),
             )
             self.cache = self._loader(
-                self.cache, kv["k"], kv["v"], slot,
+                self.cache, kv["k"], kv["v"], slot, n_blocks,
                 jnp.asarray(pages, jnp.int32),
             )
-            first = int(jnp.argmax(logits[0]))
-            req.generated.append(first)
+            if self.legacy_host_sync:
+                # pre-optimization behavior: block the dispatch loop on
+                # the first sampled token
+                tok = int(first_dev)
+                req.generated.append(tok)
+                first, set_first = tok, 1
+            else:
+                # token 1 stays on device; the host materializes it at
+                # the first pipeline-lagged completion for this request
+                req._first_dev = first_dev  # type: ignore[attr-defined]
+                first, set_first = first_dev, 1
             self.lengths[slot] = len(prompt)
             self.active[slot] = req
-            self.tokens_dev = self.tokens_dev.at[slot, 0].set(first)
+            length_val = len(prompt)
             req._tf_suffix = []  # type: ignore[attr-defined]
+        (self.lengths_dev, self.table_dev, self.mask_dev,
+         self.tokens_dev) = self._admit_dev(
+            self.lengths_dev, self.table_dev, self.mask_dev,
+            self.tokens_dev, slot, length_val,
+            jnp.asarray(table_row), first, set_first,
+        )
         return True
 
     # ------------------------------------------------------------------
     def _dispatch_decode(self) -> None:
+        t0 = time.perf_counter_ns()
         # grow page allocations where the next write crosses a block edge
-        for slot, req in self.active.items():
-            need = self.lengths[slot] // self.block + 1
-            while req.n_pages < min(need, self.mb):
+        grow_slots: List[int] = []
+        grow_idxs: List[int] = []
+        grow_pages: List[int] = []
+        # snapshot: the back-pressure force-sync below may _finish (and
+        # remove from self.active) any request, including this one
+        for slot, req in list(self.active.items()):
+            need = int(self.lengths[slot]) // self.block + 1
+            while not req.done and req.n_pages < min(need, self.mb):
                 try:
                     (page,) = self.pool.alloc(slot, 1)
                 except PoolExhausted:
                     # back-pressure: force-sync everything, retry once
+                    # (device wait — keep it out of the host-ns timer)
+                    self.backpressure_syncs += 1
+                    self.host_ns += time.perf_counter_ns() - t0
                     while self._inflight:
                         self._complete_oldest()
+                    t0 = time.perf_counter_ns()
+                    if req.done:
+                        break  # force-sync finished this very request
                     (page,) = self.pool.alloc(slot, 1)
                 self.block_table[slot, req.n_pages] = page
                 self.slot_pages[slot].append(page)
+                grow_slots.append(slot)
+                grow_idxs.append(req.n_pages)
+                grow_pages.append(page)
                 req.n_pages += 1
+                self._refs_dirty = True
+        if not self.active:
+            return  # every active request finished during force-sync
 
         # teacher-forced suffix tokens (prefix-cache admissions) override
         # the sampled token chain for their slots
-        tokens = self.tokens_dev
+        tf_slots: List[int] = []
+        tf_vals: List[int] = []
         for slot, req in self.active.items():
             tf = getattr(req, "_tf_suffix", [])
             if tf:
-                tokens = tokens.at[slot, 0].set(tf.pop(0))
+                tf_slots.append(slot)
+                tf_vals.append(tf.pop(0))
 
+        if self.legacy_host_sync:
+            self._dispatch_device_legacy(tf_slots, tf_vals, t0)
+            return
+
+        if self._refs_dirty:
+            self._page_refs = [
+                (slot, p)
+                for slot in self.active
+                for p in self.slot_pages[slot]
+            ]
+            self._refs_dirty = False
+
+        # bucketed bound on the KV sweep: pages any active sequence can
+        # touch this step (power-of-two bucket caps recompiles)
+        need_max = max(
+            int(self.lengths[s]) // self.block + 1 for s in self.active
+        )
+        n_kv = min(max(_pow2_bucket(need_max), 1), self.mb)
+        self.host_ns += time.perf_counter_ns() - t0
+
+        # pad entries use slot index max_slots (out of bounds -> dropped)
+        tokens = self.tokens_dev
+        if tf_slots:
+            pad = self.max_slots - len(tf_slots)
+            tokens = self._tf_dev(
+                tokens,
+                np.asarray(tf_slots + [self.max_slots] * pad, np.int32),
+                np.asarray(tf_vals + [0] * pad, np.int32),
+            )
+        if grow_slots:
+            pad = self.max_slots - len(grow_slots)
+            self.table_dev = self._grow_dev(
+                self.table_dev,
+                np.asarray(grow_slots + [self.max_slots] * pad, np.int32),
+                np.asarray(grow_idxs + [0] * pad, np.int32),
+                np.asarray(grow_pages + [0] * pad, np.int32),
+            )
+
+        stamp = self.pool.begin_step(self._page_refs)
+        new_tokens, self.cache, self.lengths_dev = self._decode(
+            self.params, self.cache, tokens, self.lengths_dev,
+            self.table_dev, self.mask_dev, n_kv,
+        )
+        self.tokens_dev = new_tokens
+        self._inflight.append(
+            (stamp, new_tokens, dict(self.active), self.lengths.copy())
+        )
+        for slot in self.active:
+            self.lengths[slot] += 1
+
+    def _dispatch_device_legacy(self, tf_slots, tf_vals, t0) -> None:
+        """Pre-optimization device path: re-upload the host mirrors and
+        sweep the full block table every step (benchmark baseline).
+        Its per-step host work (page_refs rebuild, mirror uploads) is
+        charged to host_ns so the benchmark comparison is symmetric."""
+        tokens = self.tokens_dev
+        for slot, tok in zip(tf_slots, tf_vals):
+            tokens = tokens.at[slot, 0].set(tok)
         page_refs = [
             (slot, p)
-            for slot, req in self.active.items()
+            for slot in self.active
             for p in self.slot_pages[slot]
         ]
         stamp = self.pool.begin_step(page_refs)
         lengths = jnp.asarray(self.lengths, jnp.int32)
         table = jnp.asarray(self.block_table, jnp.int32)
-        new_tokens, self.cache = self._decode(
-            self.params, self.cache, tokens, lengths, table
+        self.host_ns += time.perf_counter_ns() - t0
+        new_tokens, self.cache, self.lengths_dev = self._decode(
+            self.params, self.cache, tokens, lengths, table,
+            self.mask_dev, self.mb,
         )
         self.tokens_dev = new_tokens
-        active_snapshot = dict(self.active)
         self._inflight.append(
-            (stamp, new_tokens, active_snapshot, self.lengths.copy())
+            (stamp, new_tokens, dict(self.active), self.lengths.copy())
         )
         for slot in self.active:
             self.lengths[slot] += 1
@@ -319,6 +494,12 @@ class ServingEngine:
         for slot, req in active.items():
             if req.done:
                 continue
+            first_dev = getattr(req, "_first_dev", None)
+            if first_dev is not None:
+                # the step consuming token 1 has completed, so this
+                # device_get returns a ready value — no pipeline stall
+                req.generated.append(int(jax.device_get(first_dev)))
+                req._first_dev = None  # type: ignore[attr-defined]
             # this step consumed the token at position lengths_snap[slot];
             # its output is a real sample only past the prompt
             pos = int(lengths_snap[slot])
@@ -348,8 +529,12 @@ class ServingEngine:
         if to_free:
             self.pool.free(slot, to_free)
         self.slot_pages[slot] = []
+        self._refs_dirty = True
         self.block_table[slot] = 0
         self.lengths[slot] = 0
+        self.lengths_dev, self.table_dev, self.mask_dev = self._reset_dev(
+            self.lengths_dev, self.table_dev, self.mask_dev, slot
+        )
         self.free_slots.append(slot)
 
     # ------------------------------------------------------------------
@@ -357,6 +542,10 @@ class ServingEngine:
         return {
             "steps": self.steps,
             "finished": len(self.finished),
+            "host_us_per_step": (
+                self.host_ns / 1e3 / max(self.steps, 1)
+            ),
+            "backpressure_syncs": self.backpressure_syncs,
             "pool_unreclaimed": self.pool.unreclaimed(),
             "pool_freed": self.pool.freed_total,
             "pool_scan_steps": self.pool.scan_steps,

@@ -142,6 +142,47 @@ def test_prefix_cache_reuse(model):
     assert eng.prefix_cache.hits >= 2  # both full blocks hit
 
 
+def test_prefix_cache_reuse_slot0(model):
+    """Teacher-forced suffix replay in slot 0 must not be clobbered by
+    the batched token scatter's padding entries (regression: pads used
+    in-bounds slot 0 and scatter-order made the stale pad win)."""
+    rs = np.random.RandomState(9)
+    prompt = list(rs.randint(1, 500, 2 * BLOCK_SIZE + 5).astype(int))
+    want = reference_generate(model, prompt, 5)
+    # max_slots=1: every admission (incl. the cache-hit replay) is slot 0
+    eng = ServingEngine(model, max_slots=1, max_seq=MAX_SEQ,
+                        prefix_cache_entries=8, extra_pages_per_slot=6)
+    r1 = eng.submit(prompt, max_new_tokens=5)
+    eng.run_until_done()
+    r2 = eng.submit(prompt, max_new_tokens=5)
+    eng.run_until_done()
+    eng.drain()
+    assert eng.prefix_cache.hits >= 2
+    assert r1.generated == want
+    assert r2.generated == want, (r2.generated, want)
+
+
+def test_backpressure_force_sync_and_retry(model):
+    """Page growth hitting PoolExhausted must force-sync the pipeline,
+    reclaim, and retry — not crash.  Setup: a tight pool where a finished
+    request's pages are still awaiting reclamation (stale in-flight steps
+    hold the ledger) exactly when the next request needs to grow."""
+    eng = ServingEngine(model, max_slots=1, max_seq=MAX_SEQ,
+                        pipeline_depth=4, extra_pages_per_slot=1)
+    # pool: 6 pages; page 0 is scratch -> 5 usable
+    assert eng.pool.pages_per_slot == 6
+    a = eng.submit(make_prompts(1, lo=300, hi=301, seed=21)[0],
+                   max_new_tokens=2)   # 3 pages, finishes fast
+    b = eng.submit(make_prompts(1, lo=255, hi=256, seed=22)[0],
+                   max_new_tokens=4)   # 2 pages, grows at length 256
+    done = eng.run_until_done()
+    eng.drain()
+    assert len(done) == 2
+    assert len(a.generated) == 2 and len(b.generated) == 4
+    assert eng.backpressure_syncs >= 1, eng.stats()
+    assert eng.pool.unreclaimed() == 0
+
+
 def test_ledger_blocks_reuse_while_inflight(model):
     """Pages freed while steps are in flight must not be reclaimed until
     those steps complete (the async-dispatch hazard)."""

@@ -6,8 +6,12 @@ reclaimer retire/region schedules must preserve the paper's invariants.
 property tests catch logic errors deterministically and shrink.)
 """
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import (
     NOT_IN_LIST,

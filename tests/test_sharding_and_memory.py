@@ -82,6 +82,44 @@ def test_ledger_hold_blocks_reclaim():
     assert freed == ["x"]
 
 
+def test_ledger_lowest_active_amortized_o1():
+    """Prop. 2 at the ledger: lowest-active lookup must not scan the
+    active set.  With N active stamps, M reclaim calls cost O(M) ring
+    probes (the old ``min()`` implementation paid N per call), and the
+    whole schedule's queue work is bounded by one pop per issued stamp."""
+    led = StampLedger()
+    n, m = 256, 100
+    stamps = [led.issue(f"s{i}") for i in range(n)]
+    led.retire(lambda: None)
+    base = led.scan_steps
+    for _ in range(m):
+        assert led.reclaim() == 0  # blocked by all n active stamps
+    # exactly one ring-head probe per call — independent of n
+    assert led.scan_steps - base == m
+    # complete in REVERSE issue order: worst case for the lazy-deletion
+    # queue (nothing pops until the oldest stamp completes)
+    for s in reversed(stamps):
+        led.complete(s)
+    assert led.unreclaimed() == 0
+    # total: m probes + n queue pops + (n-1) blocked probes + 1 callback
+    assert led.scan_steps <= base + m + 2 * n + 1
+
+
+def test_ledger_retire_many_accounting():
+    """Batch retire takes the lock once but counts per element, exactly
+    like per-element ``retire``."""
+    led = StampLedger()
+    freed = []
+    s = led.issue("step")
+    led.retire_many([lambda i=i: freed.append(i) for i in range(5)])
+    assert led.retired_total == 5
+    assert led.unreclaimed() == 5
+    assert led.reclaim() == 0  # s still active
+    led.complete(s)
+    assert freed == [0, 1, 2, 3, 4]
+    assert led.unreclaimed() == 0
+
+
 def test_ledger_force_expire():
     led = StampLedger()
     freed = []
@@ -112,6 +150,41 @@ def test_pool_defers_reuse_until_step_completes(policy):
             s = pool.begin_step([])
             pool.complete_step(s)
     assert pool.free_slot_pages(0) == 8, policy
+    assert pool.unreclaimed() == 0
+
+
+def test_pool_batch_free_accounting():
+    """stamp-it ``free`` retires the whole batch under one ledger lock
+    (retire_many); ``freed_total`` / ``unreclaimed`` are unchanged vs.
+    per-page retire."""
+    pool = BlockPool(1, 8, policy="stamp-it")
+    pages = pool.alloc(0, 6)
+    stamp = pool.begin_step([(0, p) for p in pages])
+    pool.free(0, pages)
+    assert pool.ledger.retired_total == 6
+    assert pool.unreclaimed() == 6
+    assert pool.freed_total == 0
+    pool.complete_step(stamp)
+    assert pool.freed_total == 6
+    assert pool.unreclaimed() == 0
+    assert sorted(pool.alloc(0, 6)) == sorted(pages)
+
+
+def test_force_expire_unblocks_stuck_pool_reclaim():
+    """A dead actor's stamp (e.g. a crashed checkpoint writer holding a
+    ledger pin) blocks page reclamation indefinitely; ``force_expire``
+    after a heartbeat timeout unblocks the pool."""
+    pool = BlockPool(1, 8, policy="stamp-it")
+    pages = pool.alloc(0, 4)
+    dead = pool.ledger.issue("dead-checkpoint-writer")
+    pool.free(0, pages)  # retired at the dead actor's stamp
+    for _ in range(3):  # engine keeps stepping; reclaim stays stuck
+        s = pool.begin_step([])
+        pool.complete_step(s)
+    assert pool.free_slot_pages(0) == 4
+    assert pool.unreclaimed() == 4
+    pool.ledger.force_expire(dead)
+    assert pool.free_slot_pages(0) == 8
     assert pool.unreclaimed() == 0
 
 
