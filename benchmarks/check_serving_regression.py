@@ -1,0 +1,56 @@
+"""CI regression gate for the serving hot path.
+
+Runs the serving benchmark for the stamp-it policy and compares
+steps/sec against the checked-in ``BENCH_serving.json`` baseline:
+a drop of more than ``SERVING_BENCH_TOLERANCE`` (default 10%) FAILS.
+
+    PYTHONPATH=src python -m benchmarks.check_serving_regression
+
+Regenerate the baseline after an intentional perf change with
+``PYTHONPATH=src python -m benchmarks.serving_bench`` and commit the
+updated JSON.  ``SERVING_BENCH_TOLERANCE`` (a float, e.g. ``0.25``) can
+widen the gate on noisy shared runners.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .serving_bench import BENCH_JSON, run
+
+
+def main() -> int:
+    tolerance = float(os.environ.get("SERVING_BENCH_TOLERANCE", "0.10"))
+    if not BENCH_JSON.exists():
+        print(f"FAIL: no baseline at {BENCH_JSON}; run "
+              f"`python -m benchmarks.serving_bench` and commit it")
+        return 2
+    baseline_rows = json.loads(BENCH_JSON.read_text())
+    base = next((r for r in baseline_rows if r["policy"] == "stamp-it"),
+                None)
+    if base is None:
+        print("FAIL: baseline JSON has no stamp-it row")
+        return 2
+
+    (row,) = run(policies=("stamp-it",), write_json=False)
+    got, want = row["steps_per_s"], base["steps_per_s"]
+    ratio = got / want
+    print(f"stamp-it steps/sec: current={got:.2f} baseline={want:.2f} "
+          f"ratio={ratio:.3f} (gate: >= {1 - tolerance:.2f})")
+    if row.get("dispatches_per_step") != 1.0:
+        print(f"FAIL: dispatches_per_step = "
+              f"{row.get('dispatches_per_step')} (hot path must be one "
+              f"fused dispatch per engine step)")
+        return 1
+    if ratio < 1 - tolerance:
+        print(f"FAIL: stamp-it serving throughput dropped "
+              f"{(1 - ratio) * 100:.1f}% (> {tolerance * 100:.0f}% gate)")
+        return 1
+    print("OK: serving throughput within gate")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

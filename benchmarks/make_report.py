@@ -151,14 +151,63 @@ def bench_tables():
     return "\n".join(lines)
 
 
+def serving_stack_table():
+    """The paper's seven-scheme comparison at serving scale: one merged
+    per-policy table from BENCH_serving.json (fused engine hot path) and
+    the reclaim_cost ledger experiment (Prop. 2 scan-steps/op)."""
+    bench_json = Path(__file__).parent.parent / "BENCH_serving.json"
+    if not bench_json.exists():
+        return "(no BENCH_serving.json — run benchmarks/serving_bench.py)"
+    rows = json.loads(bench_json.read_text())
+    lines = [
+        "| policy | steps/s | host us/step | dispatches/step | "
+        "scan-steps/step | peak unreclaimed pages | pages recycled |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: -x.get("steps_per_s", 0)):
+        lines.append(
+            f"| {r['policy']} | {r['steps_per_s']:.1f} | "
+            f"{r['host_us_per_step']:.1f} | "
+            f"{r.get('dispatches_per_step', '—')} | "
+            f"{r.get('scan_steps_per_step', '—')} | "
+            f"{r['peak_unreclaimed_pages']} | {r['pages_recycled']} |")
+    # ledger-plane Prop. 2 (scan-steps/op flat in active stamps), when the
+    # full benchmark run has produced it
+    led = []
+    f = R / "bench_results_full.json"
+    if not f.exists():
+        f = R / "bench_results.json"
+    if f.exists():
+        led = [r for r in json.loads(f.read_text())
+               if r.get("bench") == "reclaim_cost_ledger"]
+    if led:
+        lines.append("\nStampLedger reclamation work per op vs pinned "
+                     "active stamps (Prop. 2, flat = amortized O(1)):\n")
+        lines.append("| active stamps | scan-steps/op |")
+        lines.append("|---|---|")
+        for r in sorted(led, key=lambda x: x["active_stamps"]):
+            lines.append(f"| {r['active_stamps']} | "
+                         f"{r['scan_steps_per_op']} |")
+    return "\n".join(lines)
+
+
+def _section(title, fn):
+    """Render one report section; missing results JSONs degrade to a
+    note instead of aborting the whole report."""
+    print(f"\n## §{title}\n")
+    try:
+        print(fn())
+    except (FileNotFoundError, ValueError, KeyError) as e:
+        print(f"(section skipped — missing results: {e!r})")
+
+
 def main():
     print("<!-- generated by benchmarks/make_report.py -->")
-    print("\n## §Dry-run\n")
-    print(dryrun_summary())
-    print("\n## §Roofline\n")
-    print(roofline_tables())
-    print("\n## §Paper-validation benchmarks\n")
-    print(bench_tables())
+    _section("Dry-run", dryrun_summary)
+    _section("Roofline", roofline_tables)
+    _section("Paper-validation benchmarks", bench_tables)
+    _section("Serving stack: seven-scheme policy comparison",
+             serving_stack_table)
 
 
 if __name__ == "__main__":

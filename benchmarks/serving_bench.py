@@ -1,19 +1,20 @@
 """Serving-layer reclamation + hot-path benchmark (beyond-paper, device
-plane).
+plane): the paper's seven-scheme comparison at serving scale.
 
-Drives the ServingEngine with a stream of requests under each BlockPool
-policy and measures (a) decode throughput (steps/sec), (b) host-side
-bookkeeping overhead per step, (c) ledger/pool bookkeeping work
-(scan steps), and (d) page-reclamation latency pressure (unreclaimed
-pages over engine steps).  A ``stamp-it-legacy`` row runs the same engine
-with ``legacy_host_sync=True`` — the pre-optimization hot path that
-re-uploads ``lengths``/``block_table`` every step, blocks on the first
-sampled token at admission, and sweeps the full block table — so the
-device-resident rewrite's win is measured, not asserted
-(``speedup_vs_legacy`` on the stamp-it row).
+Drives the ServingEngine with a stream of requests under every
+ReclamationPolicy — stamp-it, epoch, new-epoch, hazard, interval, qsr,
+debra, lfrc (the paper's §4 set, the adapter-backed ones running the
+actual ``core.schemes`` implementations) plus the native scan/refcount
+analogues — and measures (a) decode throughput (steps/sec), (b) host
+bookkeeping overhead per step, (c) policy bookkeeping work (scan steps),
+and (d) page-reclamation latency pressure (peak unreclaimed pages).
+Every row also records ``dispatches_per_step`` (== 1.0 on the fused hot
+path).
 
 ``python -m benchmarks.serving_bench`` writes ``BENCH_serving.json`` at
-the repo root: the serving-perf trajectory baseline for future PRs.
+the repo root: the serving-perf trajectory baseline that
+``benchmarks/check_serving_regression.py`` gates CI against (>10%
+stamp-it steps/sec drop fails the workflow).
 """
 
 from __future__ import annotations
@@ -25,17 +26,20 @@ from pathlib import Path
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
+from repro.memory import PAPER_POLICIES
 from repro.models import Model
 from repro.serving import ServingEngine
 
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
+#: benchmarked by default: the paper's seven-scheme set + native analogues
+BENCH_POLICIES = tuple(PAPER_POLICIES) + ("scan", "refcount")
 
-def _drive(model, prompts, *, policy, legacy, max_new, warmup_prompts,
+
+def _drive(model, prompts, *, policy, max_new, warmup_prompts,
            max_seq, repeats=3):
     eng = ServingEngine(model, max_slots=4, max_seq=max_seq, policy=policy,
-                        pipeline_depth=3, extra_pages_per_slot=2,
-                        legacy_host_sync=legacy)
+                        pipeline_depth=3, extra_pages_per_slot=2)
     # warm the prefill/decode compile caches so the timed section measures
     # the steady-state hot path, not XLA compilation
     for p in warmup_prompts:
@@ -72,31 +76,31 @@ def _drive(model, prompts, *, policy, legacy, max_new, warmup_prompts,
         if best is None or dt < best[0]:
             best = (dt, d, host_us, peak)
     dt, d, host_us, peak = best
+    scans = d["pool_scan_steps"] + d["ledger_scan_steps"]
     return {
         "bench": "serving_pool",
-        "policy": policy + ("-legacy" if legacy else ""),
+        "policy": policy,
         "steps": d["steps"],
         "time_s": round(dt, 3),
         "steps_per_s": round(d["steps"] / dt, 2),
         "host_us_per_step": round(host_us, 2),
+        "dispatches_per_step": eng.stats()["dispatches_per_step"],
         "peak_unreclaimed_pages": peak,
         "final_unreclaimed": eng.pool.unreclaimed(),
         "ledger_scan_steps": d["ledger_scan_steps"],
-        "bookkeeping_scans": d["pool_scan_steps"]
-        + d["ledger_scan_steps"],
+        "bookkeeping_scans": scans,
+        "scan_steps_per_step": round(scans / max(d["steps"], 1), 3),
         "pages_recycled": d["pool_freed"],
         "backpressure_syncs": d["backpressure_syncs"],
     }
 
 
-def run(policies=("stamp-it", "epoch", "scan", "refcount"),
-        n_requests: int = 16, max_new: int = 32, seed: int = 0,
-        max_seq: int = 2048, with_legacy: bool = True,
-        write_json: bool = False):
+def run(policies=BENCH_POLICIES, n_requests: int = 16, max_new: int = 32,
+        seed: int = 0, max_seq: int = 2048, write_json: bool = False):
     """Decode-heavy chat-shaped workload on the production-shaped cell:
-    ``max_seq=2048`` makes the block table 17 pages wide, so the legacy
-    full-table sweep touches ~8-17x the pages the bucketed bound does for
-    these 40-200-token prompts — the hot-path cost this PR removes."""
+    ``max_seq=2048`` makes the block table 17 pages wide; the bucketed
+    ``n_kv`` bound keeps the KV sweep at the 1-2 pages these 40-200-token
+    prompts actually touch."""
     model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
     rs = np.random.RandomState(seed)
     prompts = [
@@ -112,20 +116,9 @@ def run(policies=("stamp-it", "epoch", "scan", "refcount"),
     ]
     rows = []
     for policy in policies:
-        rows.append(_drive(model, prompts, policy=policy, legacy=False,
+        rows.append(_drive(model, prompts, policy=policy,
                            max_new=max_new, warmup_prompts=warmup,
                            max_seq=max_seq))
-    if with_legacy:
-        # pre-PR hot path, stamp-it policy: the speedup denominator
-        legacy = _drive(model, prompts, policy="stamp-it", legacy=True,
-                        max_new=max_new, warmup_prompts=warmup,
-                        max_seq=max_seq)
-        rows.append(legacy)
-        for r in rows:
-            if r["policy"] == "stamp-it":
-                r["speedup_vs_legacy"] = round(
-                    r["steps_per_s"] / legacy["steps_per_s"], 2
-                )
     if write_json:
         BENCH_JSON.write_text(json.dumps(rows, indent=1))
     return rows

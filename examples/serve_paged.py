@@ -1,8 +1,10 @@
 """End-to-end driver: serve a small model with batched requests through the
-continuous-batching engine — paged KV cache, prefix cache, and Stamp-it
-page reclamation under asynchronous dispatch.
+continuous-batching engine — paged KV cache, prefix cache, and pluggable
+page reclamation under asynchronous dispatch.  Any of the paper's seven
+schemes (plus the native analogues) is selectable via ``--policy``; with
+``--temperature`` the fused decode step samples on device.
 
-    PYTHONPATH=src python examples/serve_paged.py --policy stamp-it
+    PYTHONPATH=src python examples/serve_paged.py --policy hazard
 """
 
 import argparse
@@ -11,6 +13,7 @@ import time
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
+from repro.memory import POLICIES
 from repro.models import Model
 from repro.serving import ServingEngine
 
@@ -18,15 +21,18 @@ from repro.serving import ServingEngine
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="stamp-it",
-                    choices=["stamp-it", "epoch", "scan", "refcount"])
+                    choices=sorted(POLICIES))
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args()
 
     model = Model(smoke_config(ARCHS["granite-3-8b"]))
     eng = ServingEngine(
         model, max_slots=3, max_seq=512, policy=args.policy,
         pipeline_depth=3, prefix_cache_entries=16, extra_pages_per_slot=4,
+        temperature=args.temperature, top_p=args.top_p,
     )
     rs = np.random.RandomState(0)
     shared_prefix = list(rs.randint(1, 500, 128).astype(int))
@@ -51,7 +57,9 @@ def main() -> None:
     for r in done[:4]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
     s = eng.stats()
-    print(f"engine steps: {s['steps']}  prefix hits/misses: "
+    print(f"engine steps: {s['steps']}  "
+          f"dispatches/step: {s['dispatches_per_step']:.1f}  "
+          f"prefix hits/misses: "
           f"{s['prefix_hits']}/{s['prefix_misses']}  "
           f"pages recycled: {s['pool_freed']}  "
           f"unreclaimed after drain: {s['pool_unreclaimed']}")

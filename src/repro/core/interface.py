@@ -48,6 +48,7 @@ class ReclaimableNode:
         "_reclaimed",
         "_rc",
         "_birth_era",
+        "finalizer",
     )
 
     def __init__(self) -> None:
@@ -57,6 +58,10 @@ class ReclaimableNode:
         self._reclaimed = False
         self._rc = 0        # LFRC only
         self._birth_era = 0  # IBR only
+        #: optional zero-arg callback run when the scheme physically frees
+        #: the node (the C++ destructor).  The serving plane's
+        #: CoreSchemeAdapter uses it to return HBM pages to the BlockPool.
+        self.finalizer: Optional[Callable[[], None]] = None
 
     def outgoing_refs(self) -> List[ConcurrentPtr]:
         """Links owned by this node (LFRC releases them on reclamation)."""
@@ -380,6 +385,8 @@ class Reclaimer(ABC):
         node._reclaimed = True
         node._retire_next = None
         self.reclaimed.fetch_add(1)
+        if node.finalizer is not None:
+            node.finalizer()
 
     def _free_list(self, head: Optional[ReclaimableNode]) -> int:
         n = 0

@@ -1,6 +1,21 @@
 from .block_pool import BlockPool, PoolExhausted
+from .policy import (
+    PAPER_POLICIES,
+    POLICIES,
+    CoreSchemeAdapter,
+    EpochPolicy,
+    ReclamationPolicy,
+    RefcountPolicy,
+    ScanPolicy,
+    StampItPolicy,
+    make_policy,
+)
 from .prefix_cache import PrefixCache, block_key
 from .stamp_ledger import StampLedger
 
-__all__ = ["BlockPool", "PoolExhausted", "PrefixCache", "block_key",
-           "StampLedger"]
+__all__ = [
+    "BlockPool", "PoolExhausted", "PrefixCache", "block_key",
+    "StampLedger", "ReclamationPolicy", "StampItPolicy", "EpochPolicy",
+    "ScanPolicy", "RefcountPolicy", "CoreSchemeAdapter", "POLICIES",
+    "PAPER_POLICIES", "make_policy",
+]

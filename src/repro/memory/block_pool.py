@@ -1,30 +1,23 @@
-"""Paged HBM block pool with pluggable reclamation policies.
+"""Paged HBM block pool, written once against the ReclamationPolicy plane.
 
 The pool hands out page ids for the per-slot paged KV arrays
 (``(B_slots, n_pool, block, Hkv, D)``).  Freed pages cannot be reused
 immediately: an in-flight asynchronous device step (or a prefix-cache pin,
-or a checkpoint DMA) may still read them.  Four policies make the paper's
-comparison concrete at the serving layer:
-
-  * ``stamp-it``  — the StampLedger: freed pages are retired with the
-                    highest stamp; reclamation pops a sorted prefix,
-                    O(#reclaimable) (the paper's scheme, device plane).
-  * ``epoch``     — ER-analogue: pages freed in epoch e are reusable two
-                    epoch advances later; advancing scans ALL in-flight
-                    steps (O(P) scan, grace-period lag).
-  * ``scan``      — HP-analogue: reclaim scans every in-flight step's page
-                    reference set; a page is reusable iff no step
-                    references it (O(P x refs) per scan).
-  * ``refcount``  — LFRC-analogue: per-page counters maintained on every
-                    dispatch/complete (immediate reuse, per-step overhead).
+or a checkpoint DMA) may still read them.  WHICH pages are safe to reuse
+WHEN is entirely the policy's business — the pool only owns the free
+lists and exposes the step/retire lifecycle, exactly as the paper's data
+structures are written once against the Robison interface and
+parameterized by the reclaimer (see :mod:`repro.memory.policy` for the
+full registry: stamp-it, epoch, new-epoch, hazard, interval, qsr, debra,
+lfrc, plus the native scan/refcount analogues).
 """
 
 from __future__ import annotations
 
 import threading
-from collections import deque
-from typing import Dict, List, Optional, Sequence, Set
+from typing import List, Optional, Sequence, Union
 
+from .policy import ReclamationPolicy, make_policy
 from .stamp_ledger import StampLedger
 
 
@@ -38,30 +31,21 @@ class BlockPool:
         n_slots: int,
         pages_per_slot: int,
         *,
-        policy: str = "stamp-it",
+        policy: Union[str, ReclamationPolicy] = "stamp-it",
         ledger: Optional[StampLedger] = None,
     ) -> None:
-        assert policy in ("stamp-it", "epoch", "scan", "refcount")
-        self.policy = policy
         self.n_slots = n_slots
         self.pages_per_slot = pages_per_slot
-        self.ledger = ledger or StampLedger()
+        self.policy = make_policy(policy, ledger)
+        self.policy_name = self.policy.name
         self._lock = threading.Lock()
         # ascending allocation order (pop from the end of a reversed list)
         self._free: List[List[int]] = [
             list(range(pages_per_slot - 1, -1, -1)) for _ in range(n_slots)
         ]
-        # policy state
-        self._inflight: Dict[int, Set[tuple]] = {}  # stamp -> page refs
-        self._inflight_epoch: Dict[int, int] = {}   # stamp -> dispatch epoch
-        self._epoch = 0
-        self._epoch_limbo: List[List[tuple]] = [[], [], []]
-        self._refcount: Dict[tuple, int] = {}
-        self._pending_refzero: Set[tuple] = set()
-        self._pending_scan: List[tuple] = []
-        self.scan_steps = 0
         self.freed_total = 0
         self.reused_total = 0
+        self.policy.bind(self)
 
     # ------------------------------------------------------------------
     # allocation
@@ -69,136 +53,66 @@ class BlockPool:
     def alloc(self, slot: int, n: int) -> List[int]:
         with self._lock:
             free = self._free[slot]
-            if len(free) < n:
-                raise PoolExhausted(
-                    f"slot {slot}: need {n} pages, {len(free)} free "
-                    f"({self.unreclaimed()} awaiting reclamation)"
-                )
-            pages = [free.pop() for _ in range(n)]
-            self.reused_total += n
-            return pages
+            if len(free) >= n:
+                pages = [free.pop() for _ in range(n)]
+                self.reused_total += n
+                return pages
+            shortfall = len(free)
+        # the unreclaimed() probe takes the POLICY's lock — do it outside
+        # the pool lock (a concurrent retire runs policy-lock -> pool-lock
+        # via the release callback; nesting the other way would deadlock)
+        raise PoolExhausted(
+            f"slot {slot}: need {n} pages, {shortfall} free "
+            f"({self.unreclaimed()} awaiting reclamation)"
+        )
 
     def free_slot_pages(self, slot: int) -> int:
         with self._lock:
             return len(self._free[slot])
 
-    def unreclaimed(self) -> int:
-        if self.policy == "stamp-it":
-            return self.ledger.unreclaimed()
-        if self.policy == "epoch":
-            return sum(len(b) for b in self._epoch_limbo)
-        if self.policy == "scan":
-            return len(self._pending_scan)
-        return len(self._pending_refzero)
+    def _release_page(self, slot: int, page: int) -> None:
+        """Policy callback: the page is safe — back on the free list."""
+        with self._lock:
+            self._free[slot].append(page)
+            self.freed_total += 1
 
     # ------------------------------------------------------------------
-    # step lifecycle (async dispatch)
+    # step lifecycle (async dispatch) — delegated to the policy
     # ------------------------------------------------------------------
     def begin_step(self, page_refs: Sequence[tuple]) -> int:
-        """Dispatch: returns the step stamp; page_refs = pages this step
-        may read ((slot, page) tuples) — used by scan/refcount policies."""
-        stamp = self.ledger.issue("engine-step")
-        with self._lock:
-            if self.policy == "epoch":
-                self._inflight_epoch[stamp] = self._epoch
-            elif self.policy == "scan":
-                self._inflight[stamp] = set(page_refs)
-            elif self.policy == "refcount":
-                self._inflight[stamp] = set(page_refs)
-                for ref in page_refs:
-                    self._refcount[ref] = self._refcount.get(ref, 0) + 1
-        return stamp
+        """Dispatch: returns an opaque step handle; page_refs = pages this
+        step may read ((slot, page) tuples)."""
+        return self.policy.begin_step(page_refs)
 
-    def complete_step(self, stamp: int) -> None:
-        with self._lock:
-            refs = self._inflight.pop(stamp, set())
-            self._inflight_epoch.pop(stamp, None)
-            if self.policy == "refcount":
-                for ref in refs:
-                    self._refcount[ref] -= 1
-                    if self._refcount[ref] == 0:
-                        del self._refcount[ref]
-                        if ref in self._pending_refzero:
-                            self._pending_refzero.discard(ref)
-                            self._free[ref[0]].append(ref[1])
-                            self.freed_total += 1
-        self.ledger.complete(stamp)
-        if self.policy == "epoch":
-            self._try_advance_epoch()
-        elif self.policy == "scan":
-            self._scan_reclaim()
+    def complete_step(self, handle: int) -> None:
+        self.policy.complete_step(handle)
 
-    # ------------------------------------------------------------------
-    # free (retire) pages
-    # ------------------------------------------------------------------
     def free(self, slot: int, pages: Sequence[int]) -> None:
-        if self.policy == "stamp-it":
-            # one ledger lock acquisition for the whole batch (retire_many)
-            self.ledger.retire_many(
-                [self._make_release(slot, p) for p in pages]
-            )
-            self.ledger.reclaim()
-            return
-        with self._lock:
-            if self.policy == "epoch":
-                self._epoch_limbo[self._epoch % 3].extend(
-                    (slot, p) for p in pages
-                )
-            elif self.policy == "scan":
-                self._pending_scan.extend((slot, p) for p in pages)
-            else:  # refcount
-                for p in pages:
-                    ref = (slot, p)
-                    if self._refcount.get(ref, 0) == 0:
-                        self._free[slot].append(p)
-                        self.freed_total += 1
-                    else:
-                        self._pending_refzero.add(ref)
-        if self.policy == "scan":
-            self._scan_reclaim()
+        """Retire pages through the policy (NEVER straight to the free
+        list — an in-flight step may still read them)."""
+        self.policy.retire_pages(slot, pages)
 
-    def _make_release(self, slot: int, page: int):
-        def release():
-            with self._lock:
-                self._free[slot].append(page)
-                self.freed_total += 1
-
-        return release
+    def reclaim(self) -> None:
+        """Best-effort maintenance (drain / teardown), not the hot path."""
+        self.policy.reclaim()
 
     # ------------------------------------------------------------------
-    # epoch policy internals
+    # observability
     # ------------------------------------------------------------------
-    def _try_advance_epoch(self) -> None:
-        """ER-analogue: advance once no in-flight step observed an older
-        epoch; the check SCANS all in-flight steps (the O(P) cost)."""
-        with self._lock:
-            self.scan_steps += max(len(self._inflight_epoch), 1)
-            if any(e < self._epoch for e in self._inflight_epoch.values()):
-                return
-            self._epoch += 1
-            bag = self._epoch_limbo[(self._epoch - 2) % 3]
-            self._epoch_limbo[(self._epoch - 2) % 3] = []
-            for slot, p in bag:
-                self._free[slot].append(p)
-                self.freed_total += 1
+    def unreclaimed(self) -> int:
+        return self.policy.unreclaimed()
 
-    # ------------------------------------------------------------------
-    # scan policy internals
-    # ------------------------------------------------------------------
-    def _scan_reclaim(self) -> None:
-        with self._lock:
-            pending = self._pending_scan
-            if not pending:
-                return
-            referenced: Set[tuple] = set()
-            for refs in self._inflight.values():
-                self.scan_steps += len(refs)
-                referenced |= refs
-            keep = []
-            for ref in pending:
-                if ref in referenced:
-                    keep.append(ref)
-                else:
-                    self._free[ref[0]].append(ref[1])
-                    self.freed_total += 1
-            self._pending_scan = keep
+    @property
+    def scan_steps(self) -> int:
+        return self.policy.scan_steps
+
+    @property
+    def ledger_scan_steps(self) -> int:
+        return self.policy.ledger_scan_steps
+
+    @property
+    def ledger(self) -> Optional[StampLedger]:
+        """The stamp ledger for ledger-backed policies (stamp-it), else
+        None — host actors needing epoch pins (checkpoint writer,
+        detokenizer) hold through this when available."""
+        return getattr(self.policy, "ledger", None)

@@ -1,0 +1,501 @@
+"""Pluggable reclamation policies for the serving-plane BlockPool.
+
+The paper's central methodological move is putting Stamp-it and its
+competitors behind one Robison-style interface so data structures are
+written once and parameterized by the reclaimer.  This module gives the
+serving plane the same property: :class:`ReclamationPolicy` is the
+interface the BlockPool (and therefore the ServingEngine and PrefixCache)
+are written against, and every scheme from the paper's comparison is a
+concrete policy:
+
+  * native device-plane policies, tuned to the single-issuer dispatch
+    loop — ``stamp-it`` (StampLedger), ``epoch`` (ER-analogue), ``scan``
+    (HP-analogue), ``refcount`` (LFRC-analogue);
+  * :class:`CoreSchemeAdapter`, which wraps ANY
+    :class:`repro.core.interface.Reclaimer` — the paper's actual scheme
+    implementations — so ``new-epoch``, ``hazard``, ``interval``, ``qsr``,
+    ``debra`` and ``lfrc`` (and ``stamp-it-core``) drive the serving
+    workload through the exact host-plane code the §4 benchmarks measure.
+
+The adapter's mapping is the one the StampLedger docstring argues for:
+every in-flight asynchronous device step is a *thread in a critical
+region*.  ``begin_step`` attaches a fresh thread record and enters a
+region on it (plus one guard per referenced page for the pointer-based
+schemes); ``complete_step`` leaves the region and detaches.  Retired
+pages become :class:`ReclaimableNode`s whose ``finalizer`` returns the
+page to the pool free list when the scheme physically frees them.
+
+Invariant (asserted across all policies in tests/test_engine.py): a
+policy changes POOL PRESSURE, never model outputs.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from ..core.atomics import AtomicMarkedRef
+from ..core.interface import Guard, ReclaimableNode, Reclaimer
+from .stamp_ledger import StampLedger
+
+PageRef = Tuple[int, int]  # (slot, page)
+
+
+class ReclamationPolicy:
+    """Strategy interface between the BlockPool and a reclamation scheme.
+
+    Lifecycle hooks mirror the serving engine's async-dispatch reality:
+
+      * ``begin_step(page_refs)``   — a decode step is dispatched; it may
+        read every page in ``page_refs`` until it completes.  Returns an
+        opaque handle.
+      * ``complete_step(handle)``   — the host observed the step finish.
+      * ``retire_pages(slot, pages)`` — pages freed by a request finish or
+        a prefix-cache eviction; they must NOT reach the free list while
+        any in-flight step (or host-actor hold) may still read them.
+      * ``reclaim()``               — best-effort maintenance (drain /
+        teardown / benchmark boundaries), never the hot path.
+
+    The policy returns pages through ``self.release(slot, page)`` which
+    :meth:`bind` wires to the owning pool's free lists.
+    """
+
+    name = "abstract"
+
+    def __init__(self) -> None:
+        self.release: Callable[[int, int], None] = lambda s, p: None
+        self._bound_pool = None
+
+    def bind(self, pool) -> None:
+        # a policy routes reclaimed pages to ONE pool's free lists;
+        # rebinding would leak pages from the first pool into the second
+        if self._bound_pool is not None and self._bound_pool is not pool:
+            raise ValueError(
+                f"policy {self.name!r} is already bound to another "
+                f"BlockPool; create one policy instance per pool"
+            )
+        self._bound_pool = pool
+        self.release = pool._release_page
+
+    # -- step lifecycle -------------------------------------------------
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        raise NotImplementedError
+
+    def complete_step(self, handle: int) -> None:
+        raise NotImplementedError
+
+    # -- retire / reclaim ----------------------------------------------
+    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+        raise NotImplementedError
+
+    def reclaim(self) -> None:
+        pass
+
+    # -- observability --------------------------------------------------
+    def unreclaimed(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def scan_steps(self) -> int:
+        """Bookkeeping work: cross-step scans + retire-list probes."""
+        return 0
+
+    @property
+    def ledger_scan_steps(self) -> int:
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# Native device-plane policies (single-issuer tuned)
+# ---------------------------------------------------------------------------
+class StampItPolicy(ReclamationPolicy):
+    """The paper's scheme at the serving layer: retired pages are tagged
+    with the highest stamp and parked on a stamp-sorted ring; reclamation
+    pops a prefix once ``lowest_active`` passes — O(#reclaimable)."""
+
+    name = "stamp-it"
+
+    def __init__(self, ledger: Optional[StampLedger] = None) -> None:
+        super().__init__()
+        self.ledger = ledger or StampLedger()
+
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        return self.ledger.issue("engine-step")
+
+    def complete_step(self, handle: int) -> None:
+        self.ledger.complete(handle)
+
+    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+        # one ledger lock acquisition for the whole batch
+        self.ledger.retire_many(
+            [lambda s=slot, p=p: self.release(s, p) for p in pages]
+        )
+        self.ledger.reclaim()
+
+    def reclaim(self) -> None:
+        self.ledger.reclaim()
+
+    def unreclaimed(self) -> int:
+        return self.ledger.unreclaimed()
+
+    @property
+    def ledger_scan_steps(self) -> int:
+        return self.ledger.scan_steps
+
+
+class EpochPolicy(ReclamationPolicy):
+    """ER-analogue: pages freed in epoch e are reusable two epoch advances
+    later; advancing scans ALL in-flight steps (O(P), grace-period lag)."""
+
+    name = "epoch"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._lock = threading.Lock()
+        self._next = 1
+        self._epoch = 0
+        self._inflight_epoch: Dict[int, int] = {}
+        self._limbo: List[List[PageRef]] = [[], [], []]
+        self._scans = 0
+
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        with self._lock:
+            h = self._next
+            self._next += 1
+            self._inflight_epoch[h] = self._epoch
+            return h
+
+    def complete_step(self, handle: int) -> None:
+        with self._lock:
+            self._inflight_epoch.pop(handle, None)
+        self._try_advance()
+
+    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+        with self._lock:
+            self._limbo[self._epoch % 3].extend((slot, p) for p in pages)
+
+    def _try_advance(self) -> None:
+        """Advance once no in-flight step observed an older epoch; the
+        check SCANS all in-flight steps (the O(P) cost)."""
+        with self._lock:
+            self._scans += max(len(self._inflight_epoch), 1)
+            if any(e < self._epoch for e in self._inflight_epoch.values()):
+                return
+            self._epoch += 1
+            bag = self._limbo[(self._epoch - 2) % 3]
+            self._limbo[(self._epoch - 2) % 3] = []
+        for slot, p in bag:
+            self.release(slot, p)
+
+    def reclaim(self) -> None:
+        self._try_advance()
+
+    def unreclaimed(self) -> int:
+        return sum(len(b) for b in self._limbo)
+
+    @property
+    def scan_steps(self) -> int:
+        return self._scans
+
+
+class ScanPolicy(ReclamationPolicy):
+    """HP-analogue: reclaim scans every in-flight step's page-reference
+    set; a page is reusable iff no step references it (O(P x refs))."""
+
+    name = "scan"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._lock = threading.Lock()
+        self._next = 1
+        self._inflight: Dict[int, Set[PageRef]] = {}
+        self._pending: List[PageRef] = []
+        self._scans = 0
+
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        with self._lock:
+            h = self._next
+            self._next += 1
+            self._inflight[h] = set(page_refs)
+            return h
+
+    def complete_step(self, handle: int) -> None:
+        with self._lock:
+            self._inflight.pop(handle, None)
+        self._scan_reclaim()
+
+    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+        with self._lock:
+            self._pending.extend((slot, p) for p in pages)
+        self._scan_reclaim()
+
+    def _scan_reclaim(self) -> None:
+        with self._lock:
+            if not self._pending:
+                return
+            referenced: Set[PageRef] = set()
+            for refs in self._inflight.values():
+                self._scans += len(refs)
+                referenced |= refs
+            keep, free = [], []
+            for ref in self._pending:
+                (keep if ref in referenced else free).append(ref)
+            self._pending = keep
+        for slot, p in free:
+            self.release(slot, p)
+
+    def reclaim(self) -> None:
+        self._scan_reclaim()
+
+    def unreclaimed(self) -> int:
+        return len(self._pending)
+
+    @property
+    def scan_steps(self) -> int:
+        return self._scans
+
+
+class RefcountPolicy(ReclamationPolicy):
+    """LFRC-analogue: per-page counters maintained on every dispatch and
+    completion (immediate reuse, per-step counter overhead)."""
+
+    name = "refcount"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._lock = threading.Lock()
+        self._next = 1
+        self._inflight: Dict[int, Set[PageRef]] = {}
+        self._rc: Dict[PageRef, int] = {}
+        self._pending: Set[PageRef] = set()
+
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        with self._lock:
+            h = self._next
+            self._next += 1
+            refs = set(page_refs)
+            self._inflight[h] = refs
+            for ref in refs:
+                self._rc[ref] = self._rc.get(ref, 0) + 1
+            return h
+
+    def complete_step(self, handle: int) -> None:
+        free = []
+        with self._lock:
+            for ref in self._inflight.pop(handle, set()):
+                self._rc[ref] -= 1
+                if self._rc[ref] == 0:
+                    del self._rc[ref]
+                    if ref in self._pending:
+                        self._pending.discard(ref)
+                        free.append(ref)
+        for slot, p in free:
+            self.release(slot, p)
+
+    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+        free = []
+        with self._lock:
+            for p in pages:
+                ref = (slot, p)
+                if self._rc.get(ref, 0) == 0:
+                    free.append(ref)
+                else:
+                    self._pending.add(ref)
+        for slot, p in free:
+            self.release(slot, p)
+
+    def unreclaimed(self) -> int:
+        return len(self._pending)
+
+
+# ---------------------------------------------------------------------------
+# Adapter over the paper's host-plane schemes
+# ---------------------------------------------------------------------------
+class _PageNode(ReclaimableNode):
+    """A ReclaimableNode standing for one (slot, page) of HBM."""
+
+    __slots__ = ("ref",)
+
+    def __init__(self, ref: PageRef) -> None:
+        super().__init__()
+        self.ref = ref
+
+
+class CoreSchemeAdapter(ReclamationPolicy):
+    """Run the serving workload through any ``core.schemes`` Reclaimer.
+
+    Mapping (see module docstring): each in-flight engine step is a paper
+    *thread* inside a critical region.  ``begin_step`` attaches a fresh
+    ThreadRecord and enters a region on it; for pointer-based schemes
+    (``protect_implies_safe == False``: hazard pointers, LFRC) it
+    additionally acquires one guard per referenced page, because a region
+    alone protects nothing under those schemes.  Pages are intrusive
+    :class:`ReclaimableNode`s living behind per-page ``AtomicMarkedRef``
+    cells; retiring a page unlinks its cell and retires the node from the
+    engine thread's own record, and the node's ``finalizer`` returns the
+    page to the pool when the scheme frees it.
+
+    ``complete_step`` is the single-issuer quiescent point: the step's
+    guards reset, its record leaves the region and detaches, and the
+    engine record runs the scheme's own maintenance (``flush``) — the
+    scheme's scan/advance cost is therefore ITS cost, measured by its own
+    ``scan_steps`` counter, exactly as in the §4 benchmarks.
+    """
+
+    def __init__(self, reclaimer: Reclaimer) -> None:
+        super().__init__()
+        self.reclaimer = reclaimer
+        self.name = getattr(reclaimer, "name", "core")
+        # RLock: host actors (prefix-cache drain, checkpoint DMA) may
+        # retire concurrently with the engine thread's step lifecycle,
+        # and a reclaim inside the lock runs finalizers that touch
+        # released_pages re-entrantly.
+        self._lock = threading.RLock()
+        self._nodes: Dict[PageRef, Tuple[_PageNode, AtomicMarkedRef]] = {}
+        self._steps: Dict[int, Tuple[object, list]] = {}
+        self._next = 1
+        self._use_guards = not reclaimer.protect_implies_safe
+        self.retired_pages = 0
+        self.released_pages = 0
+
+    # -- page cells -----------------------------------------------------
+    def _cell_for(self, ref: PageRef) -> Tuple[_PageNode, AtomicMarkedRef]:
+        entry = self._nodes.get(ref)
+        if entry is None:
+            node = _PageNode(ref)
+            node.finalizer = self._make_finalizer(ref)
+            self.reclaimer.on_allocate(node)  # birth era for IBR
+            entry = (node, AtomicMarkedRef(node))
+            self._nodes[ref] = entry
+        return entry
+
+    def _make_finalizer(self, ref: PageRef) -> Callable[[], None]:
+        def _release() -> None:
+            with self._lock:
+                self.released_pages += 1
+            self.release(ref[0], ref[1])
+
+        return _release
+
+    # -- step lifecycle -------------------------------------------------
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        r = self.reclaimer
+        with self._lock:
+            rec = r._acquire_record()  # a fresh paper-thread per step
+            rec.region_depth = 1
+            r._enter_region(rec)
+            guards = []
+            if self._use_guards:
+                for ref in page_refs:
+                    _, cell = self._cell_for(ref)
+                    g = Guard(r, rec)
+                    g.acquire(cell)
+                    guards.append(g)
+            h = self._next
+            self._next += 1
+            self._steps[h] = (rec, guards)
+            return h
+
+    def complete_step(self, handle: int) -> None:
+        with self._lock:
+            rec, guards = self._steps.pop(handle)
+            for g in guards:
+                g.reset()
+            rec.region_depth = 0
+            self.reclaimer._leave_region(rec)
+            self.reclaimer._on_thread_detach(rec)
+            rec.in_use.store(0)
+            # single-issuer maintenance point: the scheme reclaims what
+            # its own rules now allow (epoch advance, hazard scan, ...)
+            self.reclaimer.flush()
+
+    # -- retire / reclaim ----------------------------------------------
+    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+        with self._lock:
+            for p in pages:
+                ref = (slot, p)
+                node, cell = self._cell_for(ref)
+                del self._nodes[ref]  # re-allocation gets a fresh node
+                cell.store(None)  # unlink: no new protector finds it
+                self.retired_pages += 1
+                self.reclaimer.retire(node)
+
+    def reclaim(self) -> None:
+        with self._lock:
+            self.reclaimer.flush()
+
+    def unreclaimed(self) -> int:
+        with self._lock:
+            return self.retired_pages - self.released_pages
+
+    @property
+    def scan_steps(self) -> int:
+        counter = getattr(self.reclaimer, "scan_steps", None)
+        return counter.load() if counter is not None else 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def _core(scheme_name: str) -> Callable[[], ReclamationPolicy]:
+    def factory() -> ReclamationPolicy:
+        from ..core import make_reclaimer
+
+        # 64 records bound the O(max_threads) record-acquisition scan;
+        # pipeline_depth + the engine thread is all we ever attach.
+        return CoreSchemeAdapter(make_reclaimer(scheme_name, max_threads=64))
+
+    return factory
+
+
+#: serving-plane policy registry — the paper's seven schemes plus the
+#: native single-issuer analogues kept for continuity with PR 1
+POLICIES: Dict[str, Callable[[], ReclamationPolicy]] = {
+    "stamp-it": StampItPolicy,
+    "epoch": EpochPolicy,
+    "scan": ScanPolicy,
+    "refcount": RefcountPolicy,
+    "stamp-it-core": _core("stamp-it"),
+    "new-epoch": _core("ner"),
+    "hazard": _core("hpr"),
+    "interval": _core("ibr"),
+    "qsr": _core("qsr"),
+    "debra": _core("debra"),
+    "lfrc": _core("lfrc"),
+}
+
+#: the paper's seven-scheme comparison set at serving scale
+PAPER_POLICIES = (
+    "stamp-it", "epoch", "new-epoch", "hazard", "interval", "qsr",
+    "debra", "lfrc",
+)
+
+
+def make_policy(policy, ledger: Optional[StampLedger] = None):
+    """Resolve a policy name (or pass through an instance).
+
+    ``ledger`` lets host actors share a StampLedger with the pool (their
+    ``hold()`` pins page reclamation); only the ledger-backed policy can
+    honor it, so anything else REJECTS the combination rather than
+    silently leaving the caller's holds unconnected (use-after-free)."""
+    if isinstance(policy, ReclamationPolicy):
+        if ledger is not None and getattr(policy, "ledger", None) is not ledger:
+            raise ValueError(
+                f"policy {policy.name!r} does not use the supplied ledger; "
+                f"holds taken on it would not pin reclamation"
+            )
+        return policy
+    if policy == "stamp-it":
+        return StampItPolicy(ledger)
+    if ledger is not None:
+        raise ValueError(
+            f"policy {policy!r} is not ledger-backed; a shared-ledger "
+            f"hold() would not pin reclamation — use policy='stamp-it'"
+        )
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown reclamation policy {policy!r}; "
+            f"available: {sorted(POLICIES)}"
+        ) from None

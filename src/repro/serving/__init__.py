@@ -1,3 +1,6 @@
-from .engine import Request, ServingEngine
+from .device_state import DeviceState, sample_tokens
+from .engine import ServingEngine
+from .scheduler import Request, Scheduler
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "Scheduler", "DeviceState",
+           "sample_tokens"]

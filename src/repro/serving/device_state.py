@@ -1,0 +1,348 @@
+"""Device plane of the serving engine: state arrays + the fused step.
+
+``DeviceState`` owns every array the decode loop touches on device —
+the sampled-token chain, per-slot lengths, block table, active mask,
+allocated-page counts, the prefill first-token buffer and the sampling
+RNG key — and exposes ONE jitted transition per engine step.  Slot
+admission, page-table growth, teacher-forced token overrides, slot
+resets, the decode itself and the sampler are all folded into that
+single dispatch (``stats()["dispatches_per_step"] == 1``), replacing the
+four separate ``_admit``/``_grow``/``_tf``/``_reset`` scatters of the
+PR 1 hot path.
+
+Page-growth ALLOCATION is decided device-side: the fused step computes
+the per-slot need mask from the device-resident lengths
+(``lengths // block + 1 > pages``) and consumes host-supplied candidate
+page ids for exactly the slots the mask selects (per-slot pools
+degenerate the shared-buffer prefix-sum to a per-slot candidate; the
+prefix-sum over the need mask still yields the allocation count).  The
+host never reads device lengths — it advances a deterministic mirror
+(+1 per active slot per step) that provably agrees with the device
+computation, and uses it only to pop the same free-list heads for pool
+bookkeeping and to detect exhaustion (back-pressure) BEFORE dispatch.
+
+Sampling runs on device inside the same dispatch: temperature/top-p via
+sorted inverse-CDF (:func:`sample_tokens`), with greedy argmax as the
+statically-compiled ``temperature == 0`` fast path.
+``repro.serving.sampling`` holds the host reference implementation;
+tests assert parity.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_tokens(logits, u, temperature: float, top_p: float):
+    """Temperature/top-p sampling via sorted inverse CDF (pure jnp).
+
+    Deterministic given ``u`` (B,) uniforms — mirrored bit-for-bit-modulo
+    -float-associativity by ``repro.serving.sampling.sample_ref``, which
+    tests assert against.
+    """
+    lf = logits.astype(jnp.float32) / temperature
+    order = jnp.argsort(-lf, axis=-1)  # descending, stable
+    probs = jax.nn.softmax(jnp.take_along_axis(lf, order, axis=-1), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # nucleus: smallest prefix with cumulative mass >= top_p
+    keep = (cum - probs) < top_p
+    kept = jnp.where(keep, probs, 0.0)
+    kept = kept / kept.sum(axis=-1, keepdims=True)
+    kcum = jnp.cumsum(kept, axis=-1)
+    last = keep.sum(axis=-1).astype(jnp.int32) - 1
+    idx = jnp.minimum(
+        jnp.sum((kcum <= u[:, None]).astype(jnp.int32), axis=-1), last
+    )
+    return jnp.take_along_axis(order, idx[:, None], axis=-1)[:, 0].astype(
+        jnp.int32
+    )
+
+
+class DeviceState:
+    """Device-resident serving state with a single fused step transition.
+
+    Host-side events (admission, finish, teacher-forcing) are *staged*
+    into pending buffers and applied INSIDE the next fused dispatch, in
+    order: reset -> admit -> teacher-force -> grow -> decode -> sample.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        cache,
+        *,
+        max_slots: int,
+        mb: int,
+        block: int,
+        temperature: float = 0.0,
+        top_p: float = 1.0,
+        seed: int = 0,
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.cache = cache
+        self.max_slots = max_slots
+        self.mb = mb
+        self.block = block
+        self.temperature = float(temperature)
+        self.top_p = float(top_p)
+
+        B = max_slots
+        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.lengths = jnp.zeros((B,), jnp.int32)
+        self.table = jnp.zeros((B, mb), jnp.int32)
+        self.mask = jnp.zeros((B,), jnp.int32)
+        self.pages = jnp.zeros((B,), jnp.int32)
+        self.first_buf = jnp.zeros((B,), jnp.int32)
+        self.rng = jax.random.PRNGKey(seed)
+
+        # staged host events, applied by the next fused dispatch
+        self._pending_resets: List[int] = []
+        self._pending_admits: List[Tuple] = []
+        # shared all-zeros operands for the steady state (no events
+        # pending) — device-resident so the common dispatch passes
+        # already-committed buffers instead of re-uploading numpy zeros;
+        # event paths build fresh numpy arrays (same avals, same compile)
+        self._zeros = jnp.zeros((B,), jnp.int32)
+        self._zeros_row = jnp.zeros((B, mb), jnp.int32)
+        self.stage_ns = 0  # host time spent building step operands
+
+        # dispatch accounting (decode plane vs admission plane).  Any
+        # device call made on behalf of a decode step MUST bump
+        # decode_dispatches; the ENGINE counts the steps, so the
+        # dispatches-per-step ratio catches a reintroduced extra scatter.
+        self.decode_dispatches = 0
+        self.admission_dispatches = 0
+
+        # ---- jitted device functions ----
+        # n_kv is static: one compile per power-of-two page-sweep bucket.
+        # Donated: cache, lengths, table, mask, pages, rng.  NOT donated:
+        # tokens (in-flight pipeline entries keep references for their
+        # completion device_get) and first_buf (prefill owns its donation).
+        self._step = jax.jit(
+            self._step_fn, donate_argnums=(1, 3, 4, 5, 6, 8),
+            static_argnums=(20,),
+        )
+        self._prefill_cache: Dict[int, Any] = {}
+        self._loader = jax.jit(self._load_fn, donate_argnums=(0,),
+                               static_argnums=(4,))
+        self._copier = jax.jit(self._copy_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # fused step (ONE dispatch per engine step)
+    # ------------------------------------------------------------------
+    def _step_fn(self, params, cache, tokens, lengths, table, mask, pages,
+                 first_buf, rng, reset_m, admit_m, admit_len, admit_row,
+                 admit_pages, admit_tok, admit_from_buf, admit_set_tok,
+                 tf_m, tf_vals, cand_pages, n_kv):
+        B = self.max_slots
+        rows = jnp.arange(B, dtype=jnp.int32)
+
+        # 1. slot resets (requests finished since the last dispatch)
+        keep = 1 - reset_m
+        lengths = lengths * keep
+        mask = mask * keep
+        pages = pages * keep
+        table = table * keep[:, None]
+
+        # 2. admissions
+        lengths = jnp.where(admit_m == 1, admit_len, lengths)
+        table = jnp.where(admit_m[:, None] == 1, admit_row, table)
+        mask = jnp.maximum(mask, admit_m)
+        pages = jnp.where(admit_m == 1, admit_pages, pages)
+        first = jnp.where(admit_from_buf == 1, first_buf, admit_tok)
+        tokens = jnp.where(admit_set_tok[:, None] == 1, first[:, None],
+                           tokens)
+
+        # 3. teacher-forced suffix overrides (prefix-cache replay)
+        tokens = jnp.where(tf_m[:, None] == 1, tf_vals[:, None], tokens)
+
+        # 4. device-side page growth: the need mask comes from the
+        # DEVICE lengths; the host only supplied per-slot candidates.
+        need = ((mask == 1)
+                & ((lengths // self.block + 1) > pages)
+                & (pages < self.mb))
+        pos = jnp.clip(pages, 0, self.mb - 1)
+        cur = table[rows, pos]
+        table = table.at[rows, pos].set(jnp.where(need, cand_pages, cur))
+        pages = pages + need.astype(jnp.int32)
+
+        # 5. decode
+        logits, cache = self.model.decode_step(
+            params, cache,
+            {"tokens": tokens, "lengths": lengths, "block_table": table},
+            n_kv=n_kv,
+        )
+
+        # 6. sample (greedy is the statically-compiled temperature=0 path)
+        if self.temperature > 0.0:
+            rng, sub = jax.random.split(rng)
+            u = jax.random.uniform(sub, (B,), jnp.float32)
+            new_tokens = sample_tokens(logits, u, self.temperature,
+                                       self.top_p)
+        else:
+            new_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (new_tokens[:, None], cache, lengths + mask, table, mask,
+                pages, rng)
+
+    # ------------------------------------------------------------------
+    # admission-plane bodies (per-request, not per-step)
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, params, tokens, last_index, first_buf, rng, slot):
+        logits, kv = self.model.prefill(
+            params, {"tokens": tokens, "last_index": last_index}
+        )
+        # sample on-device: the host never syncs on prefill logits; the
+        # first token lands in first_buf for the next fused step AND is
+        # returned as a scalar for the pipeline-lagged completion read.
+        # Token 1 uses the SAME sampler as decode steps, so sampled mode
+        # is consistent from position 0.
+        if self.temperature > 0.0:
+            rng, sub = jax.random.split(rng)
+            u = jax.random.uniform(sub, (1,), jnp.float32)
+            first = sample_tokens(logits, u, self.temperature, self.top_p)
+        else:
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first_buf.at[slot].set(first[0]), first[0], kv, rng
+
+    def _load_fn(self, cache, k, v, slot, nb, pages):
+        """Scatter prefill KV (L,1,S,Hkv,D) into this slot's pages.
+
+        ``nb`` (static) trims the power-of-two prefill bucket back to the
+        pages actually allocated for the prompt."""
+        L = k.shape[0]
+        S = nb * self.block
+        kp = cache["layers"]["k_pool"]
+        kr = k[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
+        vr = v[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
+        kp = kp.at[:, slot, pages].set(kr.astype(kp.dtype))
+        vp = cache["layers"]["v_pool"].at[:, slot, pages].set(
+            vr.astype(kp.dtype)
+        )
+        return dict(cache, layers=dict(
+            cache["layers"], k_pool=kp, v_pool=vp))
+
+    def _copy_fn(self, cache, src_slots, src_pages, dst_slot, dst_pages):
+        kp = cache["layers"]["k_pool"]
+        vp = cache["layers"]["v_pool"]
+        kp = kp.at[:, dst_slot, dst_pages].set(kp[:, src_slots, src_pages])
+        vp = vp.at[:, dst_slot, dst_pages].set(vp[:, src_slots, src_pages])
+        return dict(cache, layers=dict(cache["layers"], k_pool=kp,
+                                       v_pool=vp))
+
+    # ------------------------------------------------------------------
+    # staging API (host events -> next fused dispatch)
+    # ------------------------------------------------------------------
+    def stage_reset(self, slot: int) -> None:
+        self._pending_resets.append(slot)
+
+    def stage_admit(self, slot: int, length: int, row: np.ndarray,
+                    n_pages: int, *, token: int = 0,
+                    token_from_buf: bool = False,
+                    set_token: bool = False) -> None:
+        self._pending_admits.append(
+            (slot, length, row, n_pages, token, token_from_buf, set_token)
+        )
+
+    # ------------------------------------------------------------------
+    # dispatch API
+    # ------------------------------------------------------------------
+    def prefill(self, tokens_np: np.ndarray, last_index: int, slot: int):
+        """Bucketed prefill; returns (first-token device scalar, kv)."""
+        S = tokens_np.shape[1]
+        if S not in self._prefill_cache:
+            self._prefill_cache[S] = jax.jit(self._prefill_fn,
+                                             donate_argnums=(3, 4))
+        self.first_buf, first, kv, self.rng = self._prefill_cache[S](
+            self.params, jnp.asarray(tokens_np),
+            jnp.asarray([last_index], jnp.int32), self.first_buf,
+            self.rng, np.int32(slot),
+        )
+        self.admission_dispatches += 1
+        return first, kv
+
+    def load_prefill(self, kv, slot: int, nb: int, pages) -> None:
+        self.cache = self._loader(
+            self.cache, kv["k"], kv["v"], slot, nb,
+            jnp.asarray(pages, jnp.int32),
+        )
+        self.admission_dispatches += 1
+
+    def copy_pages(self, src_slots, src_pages, dst_slot, dst_pages) -> None:
+        self.cache = self._copier(
+            self.cache,
+            jnp.asarray(src_slots, jnp.int32),
+            jnp.asarray(src_pages, jnp.int32),
+            dst_slot,
+            jnp.asarray(dst_pages, jnp.int32),
+        )
+        self.admission_dispatches += 1
+
+    def dispatch(self, tf: Dict[int, int], grow: Dict[int, int],
+                 n_kv: int):
+        """Run ONE fused engine step; returns the new token chain.
+
+        ``tf``   — slot -> teacher-forced token for this step.
+        ``grow`` — slot -> candidate page id (consumed iff the device
+                   need mask selects the slot; host and device agree by
+                   construction, see module docstring).
+        """
+        t0 = time.perf_counter_ns()
+        B, mb = self.max_slots, self.mb
+        zeros = self._zeros
+        reset_m = zeros
+        if self._pending_resets:
+            reset_m = np.zeros((B,), np.int32)
+            for s in self._pending_resets:
+                reset_m[s] = 1
+        admit_m = admit_len = admit_pages = zeros
+        admit_tok = admit_from_buf = admit_set_tok = zeros
+        admit_row = self._zeros_row
+        if self._pending_admits:
+            admit_m = np.zeros((B,), np.int32)
+            admit_len = np.zeros((B,), np.int32)
+            admit_row = np.zeros((B, mb), np.int32)
+            admit_pages = np.zeros((B,), np.int32)
+            admit_tok = np.zeros((B,), np.int32)
+            admit_from_buf = np.zeros((B,), np.int32)
+            admit_set_tok = np.zeros((B,), np.int32)
+            for slot, length, row, n_pages, tok, from_buf, set_tok in (
+                    self._pending_admits):
+                admit_m[slot] = 1
+                admit_len[slot] = length
+                admit_row[slot] = row
+                admit_pages[slot] = n_pages
+                admit_tok[slot] = tok
+                admit_from_buf[slot] = 1 if from_buf else 0
+                admit_set_tok[slot] = 1 if set_tok else 0
+        tf_m = tf_vals = zeros
+        if tf:
+            tf_m = np.zeros((B,), np.int32)
+            tf_vals = np.zeros((B,), np.int32)
+            for slot, tok in tf.items():
+                tf_m[slot] = 1
+                tf_vals[slot] = tok
+        cand = zeros
+        if grow:
+            cand = np.zeros((B,), np.int32)
+            for slot, page in grow.items():
+                cand[slot] = page
+        self.stage_ns += time.perf_counter_ns() - t0
+
+        (self.tokens, self.cache, self.lengths, self.table, self.mask,
+         self.pages, self.rng) = self._step(
+            self.params, self.cache, self.tokens, self.lengths, self.table,
+            self.mask, self.pages, self.first_buf, self.rng, reset_m,
+            admit_m, admit_len, admit_row, admit_pages, admit_tok,
+            admit_from_buf, admit_set_tok, tf_m, tf_vals, cand, n_kv,
+        )
+        self._pending_resets.clear()
+        self._pending_admits.clear()
+        self.decode_dispatches += 1
+        return self.tokens

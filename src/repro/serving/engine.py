@@ -1,67 +1,52 @@
-"""Continuous-batching serving engine with stamped page reclamation.
+"""Continuous-batching serving engine: a thin composition root over the
+three serving planes.
 
-The engine demonstrates the paper's technique as a first-class serving
-feature.  JAX dispatch is asynchronous: up to ``pipeline_depth`` decode
-steps are in flight at once, each holding a **stamp** from the BlockPool's
-ledger between dispatch and host-observed completion.  Pages freed by a
+  * **Policy plane** (:mod:`repro.memory.policy`) — the BlockPool is
+    written once against :class:`ReclamationPolicy`; every scheme from
+    the paper's comparison (stamp-it, epoch, new-epoch, hazard, interval,
+    qsr, debra, lfrc, plus the native scan/refcount analogues) is
+    selectable via ``ServingEngine(policy=...)``.  The policy must never
+    change MODEL OUTPUTS — only pool pressure — which
+    tests/test_engine.py asserts across all policies.
+  * **Device plane** (:mod:`repro.serving.device_state`) — all decode
+    state lives on device; one engine step is exactly ONE fused dispatch
+    (reset + admit + teacher-force + device-decided page growth + decode
+    + sampler), asserted via ``stats()["dispatches_per_step"] == 1``.
+  * **Scheduler plane** (:mod:`repro.serving.scheduler`) — admission,
+    continuous batching, pipeline-lag completion, and the deterministic
+    host mirrors that let the pool allocate without ever reading device
+    state.
+
+JAX dispatch is asynchronous: up to ``pipeline_depth`` decode steps are
+in flight at once, each holding a step handle from the reclamation
+policy between dispatch and host-observed completion.  Pages freed by a
 finished request (or evicted from the prefix cache) are *retired*, not
-reused, until the lowest active stamp passes their retire stamp — with the
-stamp-it policy that reclamation is O(#reclaimable); the epoch/scan/
-refcount policies implement the paper's competitors for the serving-layer
-benchmark.  The reclamation policy must never change MODEL OUTPUTS — only
-pool pressure — which tests/test_engine.py asserts across all policies.
-
-Hot-path design (docs/serving_hot_path.md): the decode loop is **sync-free
-and device-resident**.  ``lengths``, ``block_table``, the active mask and
-the sampled-token chain live as device arrays mutated by small jitted ops
-at admission / page-growth / finish time; the per-step dispatch uploads
-NOTHING host->device and never blocks on device results (the only sync
-point is retiring the oldest in-flight step once the pipeline is full —
-exactly like a production TPU serving loop).  Prefill shapes are bucketed
-to powers of two so the prefill compile cache stays O(log max_seq), and
-the decode sweep is bounded by the bucketed maximum active page count
-(``n_kv``) rather than the full table width.  ``legacy_host_sync=True``
-restores the pre-optimization per-step upload + blocking-admission path so
-benchmarks/serving_bench.py can measure the win.
+reused, until the policy proves no in-flight step can read them.  The
+only hot-path sync point is retiring the oldest in-flight step once the
+pipeline is full — exactly like a production TPU serving loop.  See
+docs/architecture.md and docs/serving_hot_path.md.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import threading
 import time
-from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ShapeConfig
 from ..memory.block_pool import BlockPool, PoolExhausted
 from ..memory.prefix_cache import PrefixCache, block_key
 from ..models import Model
 from ..models.transformer import BLOCK_SIZE, cache_layout
+from .device_state import DeviceState
+from .scheduler import Request, Scheduler
 
 
 def _pow2_bucket(n: int) -> int:
     """Smallest power of two >= n (n >= 1)."""
     return 1 << (n - 1).bit_length()
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new_tokens: int
-    eos_id: Optional[int] = None
-    # runtime state
-    slot: int = -1
-    generated: Optional[List[int]] = None
-    n_pages: int = 0
-    done: bool = False
-    submitted_at: float = 0.0
-    finished_at: float = 0.0
 
 
 class ServingEngine:
@@ -71,12 +56,14 @@ class ServingEngine:
         *,
         max_slots: int = 4,
         max_seq: int = 256,
-        policy: str = "stamp-it",
+        policy: Any = "stamp-it",
         pipeline_depth: int = 2,
         prefix_cache_entries: int = 0,
         extra_pages_per_slot: int = 0,
         seed: int = 0,
-        legacy_host_sync: bool = False,
+        temperature: float = 0.0,
+        top_p: float = 1.0,
+        sample_seed: int = 0,
     ) -> None:
         cfg = model.cfg
         assert cache_layout(cfg) == "paged", (
@@ -89,191 +76,104 @@ class ServingEngine:
         self.block = BLOCK_SIZE
         self.mb = -(-max_seq // BLOCK_SIZE) + 1
         self.pipeline_depth = pipeline_depth
-        self.legacy_host_sync = legacy_host_sync
 
         shape = ShapeConfig("engine", "decode", max_seq, max_slots)
-        self.params = model.init_params(seed)
-        self.cache = model.init_cache(shape, pool_slack=extra_pages_per_slot)
+        params = model.init_params(seed)
+        cache = model.init_cache(shape, pool_slack=extra_pages_per_slot)
 
         # page 0 of each slot is the scratch page: inactive slots keep a
         # zeroed block-table row, so their (discarded) decode writes land
         # in page 0 instead of corrupting allocated pages.  The host pool
         # is sized from the DEVICE pool dim (cache_specs may round pages
         # up for TP divisibility).
-        pool_pages = int(self.cache["layers"]["k_pool"].shape[2])
+        pool_pages = int(cache["layers"]["k_pool"].shape[2])
         self.pool = BlockPool(max_slots, pool_pages, policy=policy)
         for s in range(max_slots):
             got = self.pool.alloc(s, 1)
             assert got == [0], "page 0 must be the scratch page"
         self.prefix_cache = PrefixCache(self.pool, prefix_cache_entries)
 
-        # host mirrors (bookkeeping only — never uploaded on the hot path)
-        self.block_table = np.zeros((max_slots, self.mb), np.int32)
-        self.lengths = np.zeros((max_slots,), np.int32)
-        self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
-        self.free_slots: List[int] = list(range(max_slots))
-        self.active: Dict[int, Request] = {}  # slot -> request
-
-        # device plane: mutated in place by jitted ops, read every step
-        self.tokens_dev = jnp.zeros((max_slots, 1), jnp.int32)
-        self.lengths_dev = jnp.zeros((max_slots,), jnp.int32)
-        self.table_dev = jnp.zeros((max_slots, self.mb), jnp.int32)
-        self.mask_dev = jnp.zeros((max_slots,), jnp.int32)
+        self.sched = Scheduler(max_slots, self.mb, self.block,
+                               pipeline_depth)
+        self.dev = DeviceState(
+            model, params, cache, max_slots=max_slots, mb=self.mb,
+            block=self.block, temperature=temperature, top_p=top_p,
+            seed=sample_seed,
+        )
 
         # page-ref cache: rebuilt only when the active page set changes
         self._page_refs: List[tuple] = []
         self._refs_dirty = True
 
-        self.waiting: Deque[Request] = deque()
-        self.finished: List[Request] = []
-        self._inflight: Deque[Tuple[int, Any, Dict[int, Request], np.ndarray]]
-        self._inflight = deque()
-        self._next_rid = 0
         self.steps = 0
+        self.decode_steps = 0  # engine steps that dispatched decode work
         self.host_ns = 0  # host-side bookkeeping time in _dispatch_decode
         self.backpressure_syncs = 0  # PoolExhausted -> force-sync events
 
-        # ---- jitted device functions ----
-        # n_kv is static: one compile per power-of-two page-sweep bucket
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(1, 3),
-                               static_argnums=(6,))
-        self._prefill_cache: Dict[int, Any] = {}
-        self._loader = jax.jit(self._load_fn, donate_argnums=(0,),
-                               static_argnums=(4,))
-        self._copier = jax.jit(self._copy_fn, donate_argnums=(0,))
-        # NOTE: the token chain is never donated — in-flight pipeline
-        # entries keep references to it for their completion device_get
-        self._admit_dev = jax.jit(self._admit_fn,
-                                  donate_argnums=(0, 1, 2))
-        self._grow_dev = jax.jit(self._grow_fn, donate_argnums=(0,))
-        self._tf_dev = jax.jit(self._tf_fn)
-        self._reset_dev = jax.jit(self._reset_fn,
-                                  donate_argnums=(0, 1, 2))
-
     # ------------------------------------------------------------------
-    # jitted bodies
+    # scheduler-plane views (public API continuity)
     # ------------------------------------------------------------------
-    def _decode_fn(self, params, cache, tokens, lengths, table, mask, n_kv):
-        """One decode step; lengths advance on-device for active slots."""
-        logits, new_cache = self.model.decode_step(
-            params, cache,
-            {"tokens": tokens, "lengths": lengths, "block_table": table},
-            n_kv=n_kv,
-        )
-        new_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return new_tokens[:, None], new_cache, lengths + mask
+    @property
+    def waiting(self):
+        return self.sched.waiting
 
-    def _prefill_fn(self, params, tokens, last_index):
-        logits, kv = self.model.prefill(
-            params, {"tokens": tokens, "last_index": last_index}
-        )
-        # sample on-device: the host never syncs on prefill logits
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return first[0], kv
+    @property
+    def active(self):
+        return self.sched.active
 
-    def _load_fn(self, cache, k, v, slot, nb, pages):
-        """Scatter prefill KV (L,1,S,Hkv,D) into this slot's pages.
+    @property
+    def finished(self):
+        return self.sched.finished
 
-        ``nb`` (static) trims the power-of-two prefill bucket back to the
-        pages actually allocated for the prompt."""
-        L = k.shape[0]
-        S = nb * self.block
-        kp = cache["layers"]["k_pool"]
-        kr = k[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
-        vr = v[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
-        kp = kp.at[:, slot, pages].set(kr.astype(kp.dtype))
-        vp = cache["layers"]["v_pool"].at[:, slot, pages].set(
-            vr.astype(kp.dtype)
-        )
-        return dict(cache, layers=dict(
-            cache["layers"], k_pool=kp, v_pool=vp))
+    @property
+    def free_slots(self):
+        return self.sched.free_slots
 
-    def _copy_fn(self, cache, src_slots, src_pages, dst_slot, dst_pages):
-        kp = cache["layers"]["k_pool"]
-        vp = cache["layers"]["v_pool"]
-        kp = kp.at[:, dst_slot, dst_pages].set(kp[:, src_slots, src_pages])
-        vp = vp.at[:, dst_slot, dst_pages].set(vp[:, src_slots, src_pages])
-        return dict(cache, layers=dict(cache["layers"], k_pool=kp,
-                                       v_pool=vp))
-
-    def _admit_fn(self, lengths, table, mask, tokens,
-                  slot, length_val, row, first, set_first):
-        """Admission: install the slot's device state in one dispatch."""
-        lengths = lengths.at[slot].set(length_val)
-        table = table.at[slot].set(row)
-        mask = mask.at[slot].set(1)
-        cur = tokens[slot, 0]
-        tokens = tokens.at[slot, 0].set(
-            jnp.where(set_first != 0, first, cur)
-        )
-        return lengths, table, mask, tokens
-
-    def _grow_fn(self, table, slots, idxs, pages):
-        """Batched block-table growth (fixed-width scatter).
-
-        Padding entries carry slot == max_slots: out-of-bounds scatter
-        updates are dropped by JAX, so pads cannot clobber real writes
-        (a duplicate in-bounds pad index would — scatter applies updates
-        in order, and a pad's stale read would win)."""
-        return table.at[slots, idxs].set(pages)
-
-    def _tf_fn(self, tokens, slots, vals):
-        """Batched teacher-forced token override (same OOB-pad scheme)."""
-        return tokens.at[slots, 0].set(vals)
-
-    def _reset_fn(self, lengths, table, mask, slot):
-        lengths = lengths.at[slot].set(0)
-        table = table.at[slot].set(jnp.zeros((self.mb,), jnp.int32))
-        mask = mask.at[slot].set(0)
-        return lengths, table, mask
+    @property
+    def _inflight(self):
+        return self.sched.inflight
 
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
-        req = Request(self._next_rid, list(map(int, prompt)),
-                      max_new_tokens, eos_id)
-        req.submitted_at = time.time()
-        self._next_rid += 1
-        self.waiting.append(req)
-        return req
+        return self.sched.submit(prompt, max_new_tokens, eos_id)
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
-        while (self.waiting or self.active or self._inflight):
+        while self.sched.has_work():
             self.step()
             if self.steps > max_steps:  # pragma: no cover
                 raise RuntimeError("engine did not converge")
-        return self.finished
+        return self.sched.finished
 
-    # ------------------------------------------------------------------
-    # engine step
-    # ------------------------------------------------------------------
     def step(self) -> None:
         self.steps += 1
         # 1. retire the oldest in-flight step if the pipeline is full
-        while len(self._inflight) >= self.pipeline_depth:
+        while self.sched.pipeline_full():
             self._complete_oldest()
         # 2. admissions
-        while self.waiting and self.free_slots:
-            if not self._admit(self.waiting[0]):
+        while self.sched.waiting and self.sched.free_slots:
+            if not self._admit(self.sched.waiting[0]):
                 break
-            self.waiting.popleft()
-        # 3. dispatch one decode step for the active slots
-        if self.active:
+            self.sched.waiting.popleft()
+        # 3. one fused dispatch for the active slots
+        if self.sched.active:
             self._dispatch_decode()
-        elif self._inflight:
+        elif self.sched.inflight:
             self._complete_oldest()
 
     def drain(self) -> None:
-        while self._inflight:
+        while self.sched.inflight:
             self._complete_oldest()
         self.prefix_cache.drain()
-        self.pool.ledger.reclaim()
+        self.pool.reclaim()
 
     # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
     def _admit(self, req: Request) -> bool:
-        slot = self.free_slots[-1]
+        slot = self.sched.free_slots[-1]
         prompt = req.prompt
         n_blocks = max(-(-len(prompt) // self.block), 1)
         # prefix-cache lookup over full prompt blocks
@@ -287,39 +187,27 @@ class ServingEngine:
         except PoolExhausted:
             self.prefix_cache.unpin(hits)
             return False
-        self.free_slots.pop()
 
         # keep at least the final prompt token out of the "hit" span so a
         # fully-cached prompt still runs one forced step to emit token 1
         n_hit_tokens = min(len(hits) * self.block, len(prompt) - 1)
         if hits:
-            self.cache = self._copier(
-                self.cache,
-                jnp.asarray([e.slot for e in hits], jnp.int32),
-                jnp.asarray([e.page for e in hits], jnp.int32),
-                slot,
-                jnp.asarray(pages[: len(hits)], jnp.int32),
+            self.dev.copy_pages(
+                [e.slot for e in hits], [e.page for e in hits],
+                slot, pages[: len(hits)],
             )
         self.prefix_cache.unpin(hits)
 
-        table_row = np.zeros((self.mb,), np.int32)
-        table_row[:n_blocks] = pages
-        self.block_table[slot] = table_row
-        self.slot_pages[slot] = list(pages)
         self._refs_dirty = True
-        req.slot = slot
-        req.generated = []
         req._first_dev = None  # type: ignore[attr-defined]
-
-        req.n_pages = n_blocks
 
         suffix = prompt[n_hit_tokens:]
         if n_hit_tokens and len(suffix) <= 2 * self.block:
             # short suffix after a cache hit: teacher-force through decode
-            self.lengths[slot] = n_hit_tokens
-            self.active[slot] = req
+            self.sched.bind_slot(req, slot, pages, n_hit_tokens)
             req._tf_suffix = list(suffix)  # type: ignore[attr-defined]
-            length_val, first, set_first = n_hit_tokens, 0, 0
+            self.dev.stage_admit(slot, n_hit_tokens,
+                                 self.sched.block_table[slot], n_blocks)
         else:
             # classic prefill, bucketed to a power-of-two block count so
             # the compile cache is O(log(max_seq/block)) instead of one
@@ -328,167 +216,92 @@ class ServingEngine:
             S = nb_bucket * self.block
             pad = S - len(prompt)
             toks = np.asarray(prompt + [0] * pad, np.int32)[None]
-            if S not in self._prefill_cache:
-                self._prefill_cache[S] = jax.jit(self._prefill_fn)
-            first_dev, kv = self._prefill_cache[S](
-                self.params, jnp.asarray(toks),
-                jnp.asarray([len(prompt) - 1], jnp.int32),
-            )
-            self.cache = self._loader(
-                self.cache, kv["k"], kv["v"], slot, n_blocks,
-                jnp.asarray(pages, jnp.int32),
-            )
-            if self.legacy_host_sync:
-                # pre-optimization behavior: block the dispatch loop on
-                # the first sampled token
-                tok = int(first_dev)
-                req.generated.append(tok)
-                first, set_first = tok, 1
-            else:
-                # token 1 stays on device; the host materializes it at
-                # the first pipeline-lagged completion for this request
-                req._first_dev = first_dev  # type: ignore[attr-defined]
-                first, set_first = first_dev, 1
-            self.lengths[slot] = len(prompt)
-            self.active[slot] = req
-            length_val = len(prompt)
+            first_dev, kv = self.dev.prefill(toks, len(prompt) - 1, slot)
+            self.dev.load_prefill(kv, slot, n_blocks, pages)
+            # token 1 stays on device (in the prefill first-token buffer,
+            # which the fused step reads); the host materializes it at
+            # the first pipeline-lagged completion for this request
+            req._first_dev = first_dev  # type: ignore[attr-defined]
+            self.sched.bind_slot(req, slot, pages, len(prompt))
             req._tf_suffix = []  # type: ignore[attr-defined]
-        (self.lengths_dev, self.table_dev, self.mask_dev,
-         self.tokens_dev) = self._admit_dev(
-            self.lengths_dev, self.table_dev, self.mask_dev,
-            self.tokens_dev, slot, length_val,
-            jnp.asarray(table_row), first, set_first,
-        )
+            self.dev.stage_admit(slot, len(prompt),
+                                 self.sched.block_table[slot], n_blocks,
+                                 token_from_buf=True, set_token=True)
         return True
 
     # ------------------------------------------------------------------
+    # decode dispatch (ONE fused device call)
+    # ------------------------------------------------------------------
     def _dispatch_decode(self) -> None:
         t0 = time.perf_counter_ns()
-        # grow page allocations where the next write crosses a block edge
-        grow_slots: List[int] = []
-        grow_idxs: List[int] = []
-        grow_pages: List[int] = []
+        sched = self.sched
+        # page growth: the DEVICE decides via its lengths; the host runs
+        # the same deterministic rule on its mirror to pop the free-list
+        # candidates the device will consume, and to detect exhaustion
+        # (back-pressure) BEFORE dispatch
+        grow: Dict[int, int] = {}
         # snapshot: the back-pressure force-sync below may _finish (and
-        # remove from self.active) any request, including this one
-        for slot, req in list(self.active.items()):
-            need = int(self.lengths[slot]) // self.block + 1
-            while not req.done and req.n_pages < min(need, self.mb):
-                try:
-                    (page,) = self.pool.alloc(slot, 1)
-                except PoolExhausted:
-                    # back-pressure: force-sync everything, retry once
-                    # (device wait — keep it out of the host-ns timer)
-                    self.backpressure_syncs += 1
-                    self.host_ns += time.perf_counter_ns() - t0
-                    while self._inflight:
-                        self._complete_oldest()
-                    t0 = time.perf_counter_ns()
-                    if req.done:
-                        break  # force-sync finished this very request
-                    (page,) = self.pool.alloc(slot, 1)
-                self.block_table[slot, req.n_pages] = page
-                self.slot_pages[slot].append(page)
-                grow_slots.append(slot)
-                grow_idxs.append(req.n_pages)
-                grow_pages.append(page)
-                req.n_pages += 1
-                self._refs_dirty = True
-        if not self.active:
+        # remove from active) any request, including this one
+        for slot, req in list(sched.active.items()):
+            need = min(int(sched.lengths[slot]) // self.block + 1, self.mb)
+            if req.done or req.n_pages >= need:
+                continue
+            assert need - req.n_pages == 1, "mirror drifted from device"
+            try:
+                (page,) = self.pool.alloc(slot, 1)
+            except PoolExhausted:
+                # back-pressure: force-sync everything, retry once
+                # (device wait — keep it out of the host-ns timer)
+                self.backpressure_syncs += 1
+                self.host_ns += time.perf_counter_ns() - t0
+                while sched.inflight:
+                    self._complete_oldest()
+                t0 = time.perf_counter_ns()
+                if req.done:
+                    continue  # force-sync finished this very request
+                (page,) = self.pool.alloc(slot, 1)
+            sched.block_table[slot, req.n_pages] = page
+            sched.slot_pages[slot].append(page)
+            grow[slot] = page
+            req.n_pages += 1
+            self._refs_dirty = True
+        if not sched.active:
             return  # every active request finished during force-sync
 
         # teacher-forced suffix tokens (prefix-cache admissions) override
         # the sampled token chain for their slots
-        tf_slots: List[int] = []
-        tf_vals: List[int] = []
-        for slot, req in self.active.items():
-            tf = getattr(req, "_tf_suffix", [])
-            if tf:
-                tf_slots.append(slot)
-                tf_vals.append(tf.pop(0))
-
-        if self.legacy_host_sync:
-            self._dispatch_device_legacy(tf_slots, tf_vals, t0)
-            return
+        tf: Dict[int, int] = {}
+        for slot, req in sched.active.items():
+            suffix = getattr(req, "_tf_suffix", [])
+            if suffix:
+                tf[slot] = suffix.pop(0)
 
         if self._refs_dirty:
-            self._page_refs = [
-                (slot, p)
-                for slot in self.active
-                for p in self.slot_pages[slot]
-            ]
+            self._page_refs = sched.page_refs()
             self._refs_dirty = False
 
         # bucketed bound on the KV sweep: pages any active sequence can
         # touch this step (power-of-two bucket caps recompiles)
-        need_max = max(
-            int(self.lengths[s]) // self.block + 1 for s in self.active
-        )
-        n_kv = min(max(_pow2_bucket(need_max), 1), self.mb)
+        n_kv = min(max(_pow2_bucket(sched.max_need_pages()), 1), self.mb)
         self.host_ns += time.perf_counter_ns() - t0
-
-        # pad entries use slot index max_slots (out of bounds -> dropped)
-        tokens = self.tokens_dev
-        if tf_slots:
-            pad = self.max_slots - len(tf_slots)
-            tokens = self._tf_dev(
-                tokens,
-                np.asarray(tf_slots + [self.max_slots] * pad, np.int32),
-                np.asarray(tf_vals + [0] * pad, np.int32),
-            )
-        if grow_slots:
-            pad = self.max_slots - len(grow_slots)
-            self.table_dev = self._grow_dev(
-                self.table_dev,
-                np.asarray(grow_slots + [self.max_slots] * pad, np.int32),
-                np.asarray(grow_idxs + [0] * pad, np.int32),
-                np.asarray(grow_pages + [0] * pad, np.int32),
-            )
 
         stamp = self.pool.begin_step(self._page_refs)
-        new_tokens, self.cache, self.lengths_dev = self._decode(
-            self.params, self.cache, tokens, self.lengths_dev,
-            self.table_dev, self.mask_dev, n_kv,
+        tokens = self.dev.dispatch(tf, grow, n_kv)
+        self.decode_steps += 1
+        sched.inflight.append(
+            (stamp, tokens, dict(sched.active), sched.lengths.copy())
         )
-        self.tokens_dev = new_tokens
-        self._inflight.append(
-            (stamp, new_tokens, dict(self.active), self.lengths.copy())
-        )
-        for slot in self.active:
-            self.lengths[slot] += 1
-
-    def _dispatch_device_legacy(self, tf_slots, tf_vals, t0) -> None:
-        """Pre-optimization device path: re-upload the host mirrors and
-        sweep the full block table every step (benchmark baseline).
-        Its per-step host work (page_refs rebuild, mirror uploads) is
-        charged to host_ns so the benchmark comparison is symmetric."""
-        tokens = self.tokens_dev
-        for slot, tok in zip(tf_slots, tf_vals):
-            tokens = tokens.at[slot, 0].set(tok)
-        page_refs = [
-            (slot, p)
-            for slot in self.active
-            for p in self.slot_pages[slot]
-        ]
-        stamp = self.pool.begin_step(page_refs)
-        lengths = jnp.asarray(self.lengths, jnp.int32)
-        table = jnp.asarray(self.block_table, jnp.int32)
-        self.host_ns += time.perf_counter_ns() - t0
-        new_tokens, self.cache, self.lengths_dev = self._decode(
-            self.params, self.cache, tokens, lengths, table,
-            self.mask_dev, self.mb,
-        )
-        self.tokens_dev = new_tokens
-        self._inflight.append(
-            (stamp, new_tokens, dict(self.active), self.lengths.copy())
-        )
-        for slot in self.active:
-            self.lengths[slot] += 1
+        sched.advance_lengths()
 
     # ------------------------------------------------------------------
+    # completion (the pipeline-lagged sync point)
+    # ------------------------------------------------------------------
     def _complete_oldest(self) -> None:
-        if not self._inflight:
+        if not self.sched.inflight:
             return
-        stamp, tokens_dev, active, lengths_snap = self._inflight.popleft()
+        stamp, tokens_dev, active, lengths_snap = (
+            self.sched.inflight.popleft()
+        )
         tokens = np.asarray(jax.device_get(tokens_dev))  # sync point
         self.pool.complete_step(stamp)
         for slot, req in active.items():
@@ -514,10 +327,9 @@ class ServingEngine:
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True
         req.finished_at = time.time()
-        self.finished.append(req)
-        del self.active[slot]
-        # donate full prompt blocks to the prefix cache; free the rest
-        pages = self.slot_pages[slot]
+        self.sched.finished.append(req)
+        pages = self.sched.release_slot(slot)
+        # donate full prompt blocks to the prefix cache; retire the rest
         donated = set()
         for i in range(len(req.prompt) // self.block):
             key = block_key(req.prompt[: (i + 1) * self.block])
@@ -528,28 +340,31 @@ class ServingEngine:
         to_free = [p for p in pages if p not in donated]
         if to_free:
             self.pool.free(slot, to_free)
-        self.slot_pages[slot] = []
         self._refs_dirty = True
-        self.block_table[slot] = 0
-        self.lengths[slot] = 0
-        self.lengths_dev, self.table_dev, self.mask_dev = self._reset_dev(
-            self.lengths_dev, self.table_dev, self.mask_dev, slot
-        )
-        self.free_slots.append(slot)
+        self.dev.stage_reset(slot)
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
         return {
             "steps": self.steps,
-            "finished": len(self.finished),
+            "finished": len(self.sched.finished),
+            # includes the device plane's operand-staging time so the
+            # fused step's host cost is measured, not hidden
             "host_us_per_step": (
-                self.host_ns / 1e3 / max(self.steps, 1)
+                (self.host_ns + self.dev.stage_ns) / 1e3
+                / max(self.steps, 1)
             ),
+            # numerator tracked by the device plane, denominator by the
+            # engine: a reintroduced per-step scatter shows up as > 1
+            "dispatches_per_step": (
+                self.dev.decode_dispatches / max(self.decode_steps, 1)
+            ),
+            "admission_dispatches": self.dev.admission_dispatches,
             "backpressure_syncs": self.backpressure_syncs,
             "pool_unreclaimed": self.pool.unreclaimed(),
             "pool_freed": self.pool.freed_total,
             "pool_scan_steps": self.pool.scan_steps,
-            "ledger_scan_steps": self.pool.ledger.scan_steps,
+            "ledger_scan_steps": self.pool.ledger_scan_steps,
             "prefix_hits": self.prefix_cache.hits,
             "prefix_misses": self.prefix_cache.misses,
             "prefix_evictions": self.prefix_cache.evictions,

@@ -1,0 +1,117 @@
+"""Scheduler plane of the serving engine: admission, continuous batching
+and pipeline-lag completion bookkeeping.
+
+The scheduler owns everything request-shaped on the host: the waiting
+queue, the slot -> request map, the free-slot stack, the in-flight
+pipeline of dispatched-but-unobserved steps, and the deterministic host
+mirrors of the device state (lengths, block table, per-slot page lists).
+The mirrors are advanced by the same rules the device applies inside the
+fused step (+1 per active slot per dispatch; set at admission; zeroed at
+finish), so the host NEVER reads device state to make a scheduling or
+allocation decision — agreement is by construction, not by syncing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    # runtime state
+    slot: int = -1
+    generated: Optional[List[int]] = None
+    n_pages: int = 0
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class Scheduler:
+    def __init__(self, max_slots: int, mb: int, block: int,
+                 pipeline_depth: int) -> None:
+        self.max_slots = max_slots
+        self.mb = mb
+        self.block = block
+        self.pipeline_depth = pipeline_depth
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}  # slot -> request
+        self.finished: List[Request] = []
+        self.free_slots: List[int] = list(range(max_slots))
+        # (stamp, tokens_dev, active snapshot, lengths snapshot)
+        self.inflight: Deque[Tuple[int, Any, Dict[int, Request],
+                                   np.ndarray]] = deque()
+        # host mirrors (bookkeeping only — never uploaded on the hot path)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.block_table = np.zeros((max_slots, mb), np.int32)
+        self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        self._next_rid = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int]) -> Request:
+        req = Request(self._next_rid, list(map(int, prompt)),
+                      max_new_tokens, eos_id)
+        req.submitted_at = time.time()
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active or self.inflight)
+
+    def pipeline_full(self) -> bool:
+        return len(self.inflight) >= self.pipeline_depth
+
+    # ------------------------------------------------------------------
+    def bind_slot(self, req: Request, slot: int, pages: List[int],
+                  length: int) -> None:
+        """Install a request into a slot: mirrors + runtime state."""
+        assert self.free_slots and self.free_slots[-1] == slot
+        self.free_slots.pop()
+        req.slot = slot
+        req.generated = []
+        req.n_pages = len(pages)
+        row = np.zeros((self.mb,), np.int32)
+        row[: len(pages)] = pages
+        self.block_table[slot] = row
+        self.slot_pages[slot] = list(pages)
+        self.lengths[slot] = length
+        self.active[slot] = req
+
+    def release_slot(self, slot: int) -> List[int]:
+        """Finish bookkeeping: returns the pages the slot held."""
+        pages = self.slot_pages[slot]
+        self.slot_pages[slot] = []
+        self.block_table[slot] = 0
+        self.lengths[slot] = 0
+        del self.active[slot]
+        self.free_slots.append(slot)
+        return pages
+
+    def advance_lengths(self) -> None:
+        """Mirror of the device's ``lengths + mask`` (one per dispatch)."""
+        for slot in self.active:
+            self.lengths[slot] += 1
+
+    def page_refs(self) -> List[tuple]:
+        return [
+            (slot, p)
+            for slot in self.active
+            for p in self.slot_pages[slot]
+        ]
+
+    def max_need_pages(self) -> int:
+        """Pages any active sequence can touch this step (n_kv bound)."""
+        return max(
+            int(self.lengths[s]) // self.block + 1 for s in self.active
+        ) if self.active else 1

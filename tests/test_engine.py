@@ -1,6 +1,8 @@
 """Serving-engine end-to-end tests: output correctness against a model-
-level reference decode, invariance across reclamation policies, prefix
-cache reuse, and pool reclamation behaviour under async dispatch."""
+level reference decode, invariance across ALL reclamation policies (the
+paper's seven schemes via the ReclamationPolicy plane plus the native
+analogues), the fused single-dispatch step, prefix cache reuse, and pool
+reclamation behaviour under async dispatch."""
 
 import jax
 import jax.numpy as jnp
@@ -8,11 +10,16 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, ShapeConfig, smoke_config
+from repro.memory import POLICIES
 from repro.models import Model
 from repro.models.transformer import BLOCK_SIZE
 from repro.serving import ServingEngine
 
 MAX_SEQ = 512
+
+#: every serving-selectable policy: the paper's seven schemes (stamp-it,
+#: epoch, new-epoch, hazard, interval, qsr, debra, lfrc) + native analogues
+ALL_POLICIES = sorted(POLICIES)
 
 
 @pytest.fixture(scope="module")
@@ -83,11 +90,15 @@ def test_engine_matches_reference(model):
     assert len(done) == 3
     for i in range(3):
         assert got[i] == want[i], f"request {i}: {got[i]} != {want[i]}"
+    # the fused hot path: admission, growth, teacher-forcing, decode and
+    # sampling fold into exactly ONE device dispatch per engine step
+    assert eng.stats()["dispatches_per_step"] == 1
 
 
-@pytest.mark.parametrize("policy", ["stamp-it", "epoch", "scan", "refcount"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
 def test_policy_invariance(model, policy):
-    """Reclamation policy may change pool pressure, never outputs."""
+    """Reclamation policy may change pool pressure, never outputs —
+    across every scheme selectable through the ReclamationPolicy plane."""
     prompts = make_prompts(4, seed=7)
     eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ, policy=policy,
                         pipeline_depth=2, extra_pages_per_slot=2)
@@ -96,12 +107,14 @@ def test_policy_invariance(model, policy):
     done = sorted(eng.run_until_done(), key=lambda r: r.rid)
     eng.drain()
     tokens = [r.generated for r in done]
-    # compare against the stamp-it run (first parametrization caches it)
+    # compare against the first parametrization's run
     key = tuple(map(tuple, tokens))
     ref = _POLICY_REFERENCE.setdefault("tokens", key)
     assert key == ref
-    # after drain, stamp-it / scan / refcount fully reclaim
-    if policy != "epoch":  # epoch needs two more grace periods by design
+    assert eng.stats()["dispatches_per_step"] == 1
+    # after drain, every policy but native-epoch fully reclaims (epoch
+    # needs two more grace periods by design)
+    if policy != "epoch":
         assert eng.pool.unreclaimed() == 0, eng.stats()
 
 
@@ -160,6 +173,29 @@ def test_prefix_cache_reuse_slot0(model):
     assert eng.prefix_cache.hits >= 2
     assert r1.generated == want
     assert r2.generated == want, (r2.generated, want)
+
+
+def test_sampled_mode_on_device(model):
+    """temperature/top-p sampling runs inside the single fused dispatch:
+    deterministic under a fixed sample_seed, still one dispatch/step, and
+    greedy (temperature=0) remains the statically-compiled fast path."""
+    prompts = make_prompts(3, seed=17)
+
+    def run(seed):
+        eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                            pipeline_depth=2, temperature=0.8, top_p=0.9,
+                            sample_seed=seed)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
+        done = sorted(eng.run_until_done(), key=lambda r: r.rid)
+        eng.drain()
+        assert eng.stats()["dispatches_per_step"] == 1
+        return [r.generated for r in done]
+
+    a, b = run(7), run(7)
+    assert a == b  # device RNG chain is deterministic
+    vocab = model.cfg.vocab_size
+    assert all(0 <= t < vocab for toks in a for t in toks)
 
 
 def test_backpressure_force_sync_and_retry(model):

@@ -1,0 +1,69 @@
+"""Device-sampler parity: the fused decode step's temperature/top-p
+sampler (repro.serving.device_state.sample_tokens) against the host
+reference (repro.serving.sampling.sample_ref), plus the convenience API.
+
+Both implementations share control flow (descending stable sort, softmax
+over sorted logits, nucleus truncation, inverse CDF from an explicit
+uniform); the only legal divergence is float associativity, so cases
+where ``u`` lands within 1e-5 of a cumulative-probability boundary are
+filtered before asserting exact token equality.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import sample_tokens
+from repro.serving.sampling import nucleus_cdf, sample, sample_ref
+
+
+@pytest.mark.parametrize("temperature,top_p", [
+    (0.7, 0.9), (1.0, 1.0), (1.3, 0.5), (0.4, 0.95),
+])
+def test_device_host_sampler_parity(temperature, top_p):
+    rs = np.random.RandomState(0)
+    V = 257
+    checked = 0
+    for _ in range(25):
+        logits = (rs.randn(V) * rs.uniform(0.5, 3.0)).astype(np.float32)
+        _, kcum, _ = nucleus_cdf(logits, temperature, top_p)
+        for u in (0.013, 0.2, 0.37, 0.55, 0.71, 0.9, 0.987):
+            if np.min(np.abs(kcum - np.float32(u))) < 1e-5:
+                continue  # float-associativity boundary; not a real case
+            host = sample_ref(logits, u, temperature=temperature,
+                              top_p=top_p)
+            dev = int(sample_tokens(
+                jnp.asarray(logits[None]),
+                jnp.asarray([u], jnp.float32),
+                temperature, top_p,
+            )[0])
+            assert dev == host, (u, temperature, top_p)
+            checked += 1
+    assert checked > 100  # the boundary filter must not eat the test
+
+
+def test_sampler_respects_top_p():
+    """With a spiked distribution and small top_p, only the spike set is
+    ever drawn, on device and host alike."""
+    logits = np.full((64,), -10.0, np.float32)
+    logits[7] = 5.0
+    logits[11] = 4.5
+    for u in np.linspace(0.001, 0.999, 23):
+        host = sample_ref(logits, float(u), temperature=1.0, top_p=0.6)
+        dev = int(sample_tokens(jnp.asarray(logits[None]),
+                                jnp.asarray([u], jnp.float32), 1.0, 0.6)[0])
+        assert host in (7, 11)
+        assert dev in (7, 11)
+
+
+def test_sample_convenience_api():
+    rs = np.random.RandomState(1)
+    logits = rs.randn(100).astype(np.float32)
+    assert sample(logits) == int(np.argmax(logits))  # greedy default
+    tok = sample(logits, temperature=0.8, top_p=0.9,
+                 rng=np.random.RandomState(2))
+    assert 0 <= tok < 100
+    tok_k = sample(logits, temperature=0.8, top_k=5,
+                   rng=np.random.RandomState(3))
+    top5 = set(np.argpartition(logits, -5)[-5:])
+    assert tok_k in top5

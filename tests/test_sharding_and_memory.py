@@ -7,7 +7,13 @@ import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import sharding as SH
-from repro.memory import BlockPool, PoolExhausted, PrefixCache, StampLedger
+from repro.memory import (
+    POLICIES,
+    BlockPool,
+    PoolExhausted,
+    PrefixCache,
+    StampLedger,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -197,6 +203,56 @@ def test_pool_exhaustion_reports_pending():
         pool.alloc(0, 2)
     pool.complete_step(stamp)
     assert pool.alloc(0, 2)
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_pool_defers_reuse_all_policies(policy):
+    """Every serving-selectable policy — the paper's seven schemes via
+    CoreSchemeAdapter included — must defer reuse of freed pages until
+    the in-flight step completes, then fully reclaim."""
+    pool = BlockPool(1, 8, policy=policy)
+    pages = pool.alloc(0, 4)
+    h = pool.begin_step([(0, p) for p in pages])
+    pool.free(0, pages)  # freed while the step is in flight
+    assert pool.free_slot_pages(0) <= 4, policy
+    pool.complete_step(h)
+    if policy == "epoch":
+        # native epoch: two grace periods by design
+        for _ in range(2):
+            pool.complete_step(pool.begin_step([]))
+    pool.reclaim()
+    assert pool.free_slot_pages(0) == 8, policy
+    assert pool.unreclaimed() == 0, policy
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_prefix_eviction_pinned_and_inflight(policy):
+    """PrefixCache eviction while an entry is pinned (admission copying
+    from it) and the evicted entry's page is still read by an in-flight
+    step: eviction must RETIRE the page through the policy — never
+    reuse-while-referenced — and pinned entries must survive."""
+    pool = BlockPool(1, 12, policy=policy)
+    cache = PrefixCache(pool, max_entries=2)
+    pages = pool.alloc(0, 3)
+    assert cache.insert(("a",), 0, pages[0])
+    assert cache.insert(("b",), 0, pages[1])
+    # an admission pins "a" while copying; an in-flight step dispatched
+    # before the eviction still reads BOTH cached pages
+    hits = cache.lookup([("a",)])
+    h = pool.begin_step([(0, pages[0]), (0, pages[1])])
+    free_before = pool.free_slot_pages(0)
+    # inserting "c" must evict FIFO-first *unpinned* entry ("b")
+    assert cache.insert(("c",), 0, pages[2])
+    assert ("b",) not in cache._map and ("a",) in cache._map
+    assert cache.evictions == 1
+    # the evicted page is retired, NOT free: the step may still read it
+    assert pool.free_slot_pages(0) == free_before, policy
+    assert pool.unreclaimed() == 1, policy
+    pool.complete_step(h)
+    pool.reclaim()
+    assert pool.free_slot_pages(0) == free_before + 1, policy
+    assert pool.unreclaimed() == 0, policy
+    cache.unpin(hits)
 
 
 def test_prefix_cache_fifo_and_pins():
