@@ -1,15 +1,30 @@
-"""CI regression gate for the serving hot path.
+"""CI regression gate for the serving hot path + cluster scaling.
 
-Runs the serving benchmark for the stamp-it policy and compares
-steps/sec against the checked-in ``BENCH_serving.json`` baseline:
-a drop of more than ``SERVING_BENCH_TOLERANCE`` (default 10%) FAILS.
+Gates, in order:
+
+  1. **throughput** — reruns the stamp-it serving benchmark and compares
+     steps/sec against the checked-in ``BENCH_serving.json`` baseline; a
+     drop of more than ``SERVING_BENCH_TOLERANCE`` (default 10%) FAILS,
+     as does a hot path that is no longer one fused dispatch per step.
+  2. **sweep schema** — if the baseline has a ``sweep`` section, its
+     rows must be well-formed and single-dispatch; an absent section is
+     a SKIP, not an error.
+  3. **cluster flatness** — if ``BENCH_cluster.json`` exists, stamp-it's
+     scan-steps/step must stay flat (max/min <= the recorded gate,
+     default 2x) from 1 to N replicas while the periodic checkpoint hold
+     is active; an absent file/section is a SKIP.
+
+``BENCH_serving.json`` may be the PR 2 era bare list (treated as the
+``policies`` section) or the current ``{"policies", "sweep"}`` dict.
 
     PYTHONPATH=src python -m benchmarks.check_serving_regression
 
-Regenerate the baseline after an intentional perf change with
-``PYTHONPATH=src python -m benchmarks.serving_bench`` and commit the
-updated JSON.  ``SERVING_BENCH_TOLERANCE`` (a float, e.g. ``0.25``) can
-widen the gate on noisy shared runners.
+Regenerate baselines after an intentional perf change with
+``python -m benchmarks.serving_bench`` (add ``--sweep
+pipeline_depth,slots`` for the sweep section) and
+``python -m benchmarks.cluster_bench``, then commit the JSONs.
+``SERVING_BENCH_TOLERANCE`` (a float, e.g. ``0.25``) can widen the
+throughput gate on noisy shared runners.
 """
 
 from __future__ import annotations
@@ -18,22 +33,22 @@ import json
 import os
 import sys
 
+from .cluster_bench import BENCH_CLUSTER_JSON, FLATNESS_GATE
 from .serving_bench import BENCH_JSON, run
 
 
-def main() -> int:
-    tolerance = float(os.environ.get("SERVING_BENCH_TOLERANCE", "0.10"))
-    if not BENCH_JSON.exists():
-        print(f"FAIL: no baseline at {BENCH_JSON}; run "
-              f"`python -m benchmarks.serving_bench` and commit it")
-        return 2
-    baseline_rows = json.loads(BENCH_JSON.read_text())
-    base = next((r for r in baseline_rows if r["policy"] == "stamp-it"),
-                None)
-    if base is None:
-        print("FAIL: baseline JSON has no stamp-it row")
-        return 2
+def _load_serving_baseline():
+    data = json.loads(BENCH_JSON.read_text())
+    return {"policies": data} if isinstance(data, list) else data
 
+
+def _check_throughput(baseline) -> int:
+    tolerance = float(os.environ.get("SERVING_BENCH_TOLERANCE", "0.10"))
+    rows = baseline.get("policies") or []
+    base = next((r for r in rows if r["policy"] == "stamp-it"), None)
+    if base is None:
+        print("FAIL: baseline has no stamp-it row in 'policies'")
+        return 2
     (row,) = run(policies=("stamp-it",), write_json=False)
     got, want = row["steps_per_s"], base["steps_per_s"]
     ratio = got / want
@@ -50,6 +65,70 @@ def main() -> int:
         return 1
     print("OK: serving throughput within gate")
     return 0
+
+
+def _check_sweep(baseline) -> int:
+    sweep = baseline.get("sweep")
+    if not sweep:
+        print("SKIP: no 'sweep' section in baseline (run "
+              "`serving_bench --sweep pipeline_depth,slots` to add one)")
+        return 0
+    bad = [r for r in sweep
+           if r.get("dispatches_per_step") != 1.0
+           or "pipeline_depth" not in r or "slots" not in r
+           or "steps_per_s" not in r]
+    if bad:
+        print(f"FAIL: {len(bad)}/{len(sweep)} sweep rows malformed or "
+              f"multi-dispatch (first: {bad[0]})")
+        return 1
+    print(f"OK: sweep section well-formed "
+          f"({len(sweep)} rows, all single-dispatch)")
+    return 0
+
+
+def _check_cluster() -> int:
+    if not BENCH_CLUSTER_JSON.exists():
+        print("SKIP: no BENCH_cluster.json (run "
+              "`python -m benchmarks.cluster_bench` to add the cluster "
+              "baseline)")
+        return 0
+    data = json.loads(BENCH_CLUSTER_JSON.read_text())
+    rows = data.get("cluster")
+    if not rows:
+        print("SKIP: BENCH_cluster.json has no 'cluster' section")
+        return 0
+    gate = float(data.get("flatness_gate", FLATNESS_GATE))
+    vals = {r["replicas"]: r["scan_steps_per_step"] for r in rows
+            if r.get("policy") == "stamp-it"}
+    if len(vals) < 2:
+        print("SKIP: cluster section has < 2 stamp-it replica counts")
+        return 0
+    ratio = max(vals.values()) / max(min(vals.values()), 1e-9)
+    print(f"stamp-it cluster scan-steps/step by replicas: "
+          f"{dict(sorted(vals.items()))} -> max/min={ratio:.3f} "
+          f"(gate: <= {gate})")
+    if ratio > gate:
+        print(f"FAIL: stamp-it reclamation cost not replica-flat "
+              f"({ratio:.2f}x > {gate}x from "
+              f"{min(vals)} to {max(vals)} replicas)")
+        return 1
+    print("OK: cluster reclamation cost flat across replica counts")
+    return 0
+
+
+def main() -> int:
+    if not BENCH_JSON.exists():
+        print(f"FAIL: no baseline at {BENCH_JSON}; run "
+              f"`python -m benchmarks.serving_bench` and commit it")
+        return 2
+    baseline = _load_serving_baseline()
+    rc = _check_throughput(baseline)
+    if rc:
+        return rc
+    rc = _check_sweep(baseline)
+    if rc:
+        return rc
+    return _check_cluster()
 
 
 if __name__ == "__main__":

@@ -151,14 +151,22 @@ def bench_tables():
     return "\n".join(lines)
 
 
+def _load_serving_json():
+    bench_json = Path(__file__).parent.parent / "BENCH_serving.json"
+    if not bench_json.exists():
+        return None
+    data = json.loads(bench_json.read_text())
+    return {"policies": data} if isinstance(data, list) else data
+
+
 def serving_stack_table():
     """The paper's seven-scheme comparison at serving scale: one merged
     per-policy table from BENCH_serving.json (fused engine hot path) and
     the reclaim_cost ledger experiment (Prop. 2 scan-steps/op)."""
-    bench_json = Path(__file__).parent.parent / "BENCH_serving.json"
-    if not bench_json.exists():
+    data = _load_serving_json()
+    if data is None or not data.get("policies"):
         return "(no BENCH_serving.json — run benchmarks/serving_bench.py)"
-    rows = json.loads(bench_json.read_text())
+    rows = data["policies"]
     lines = [
         "| policy | steps/s | host us/step | dispatches/step | "
         "scan-steps/step | peak unreclaimed pages | pages recycled |",
@@ -191,6 +199,63 @@ def serving_stack_table():
     return "\n".join(lines)
 
 
+def sweep_table():
+    """Paper-style scaling rows at the serving layer: per policy, vary
+    pipeline depth (thread-count analogue) and slots.  Cells are
+    steps/s (scan-steps/step)."""
+    data = _load_serving_json()
+    if data is None or not data.get("sweep"):
+        return ("(no sweep section — run "
+                "`serving_bench --sweep pipeline_depth,slots`)")
+    rows = data["sweep"]
+    cols = sorted({(r["slots"], r["pipeline_depth"]) for r in rows})
+    by = {(r["policy"], r["slots"], r["pipeline_depth"]): r for r in rows}
+    lines = [
+        "| policy | " + " | ".join(
+            f"slots={s} depth={d}" for s, d in cols) + " |",
+        "|" + "---|" * (len(cols) + 1),
+    ]
+    for policy in sorted({r["policy"] for r in rows}):
+        cells = []
+        for s, d in cols:
+            r = by.get((policy, s, d))
+            cells.append(
+                f"{r['steps_per_s']:.0f} ({r['scan_steps_per_step']})"
+                if r else "—"
+            )
+        lines.append(f"| {policy} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def cluster_table():
+    """Replica-scaling (cluster plane): scan-steps/step must stay flat
+    for stamp-it from 1..N replicas with a periodic checkpoint hold."""
+    f = Path(__file__).parent.parent / "BENCH_cluster.json"
+    if not f.exists():
+        return "(no BENCH_cluster.json — run benchmarks/cluster_bench.py)"
+    data = json.loads(f.read_text())
+    rows = data.get("cluster") or []
+    if not rows:
+        return "(BENCH_cluster.json has no cluster rows)"
+    lines = [
+        "| policy | replicas | steps/s | scan-steps/step | "
+        "peak unreclaimed | holds |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["policy"], x["replicas"])):
+        lines.append(
+            f"| {r['policy']} | {r['replicas']} | "
+            f"{r['steps_per_s']:.1f} | {r['scan_steps_per_step']} | "
+            f"{r['peak_unreclaimed_pages']} | {r['holds_issued']} |")
+    flat = data.get("flatness") or {}
+    if flat:
+        lines.append(
+            f"\nFlatness (max/min scan-steps/step across replica "
+            f"counts, gate <= {data.get('flatness_gate', 2.0)}x): "
+            + ", ".join(f"{k}: {v}x" for k, v in sorted(flat.items())))
+    return "\n".join(lines)
+
+
 def _section(title, fn):
     """Render one report section; missing results JSONs degrade to a
     note instead of aborting the whole report."""
@@ -208,6 +273,10 @@ def main():
     _section("Paper-validation benchmarks", bench_tables)
     _section("Serving stack: seven-scheme policy comparison",
              serving_stack_table)
+    _section("Serving scaling sweep (pipeline depth x slots)",
+             sweep_table)
+    _section("Cluster plane: replica scaling under checkpoint holds",
+             cluster_table)
 
 
 if __name__ == "__main__":

@@ -12,13 +12,19 @@ Every row also records ``dispatches_per_step`` (== 1.0 on the fused hot
 path).
 
 ``python -m benchmarks.serving_bench`` writes ``BENCH_serving.json`` at
-the repo root: the serving-perf trajectory baseline that
+the repo root — schema ``{"policies": [...], "sweep": [...]}`` — the
+serving-perf trajectory baseline that
 ``benchmarks/check_serving_regression.py`` gates CI against (>10%
-stamp-it steps/sec drop fails the workflow).
+stamp-it steps/sec drop fails the workflow).  ``--sweep
+pipeline_depth,slots`` additionally emits the paper-style scaling rows
+(pipeline depth is the serving analogue of the paper's thread count:
+in-flight steps = concurrent critical regions), rendered as a table by
+``benchmarks/make_report.py``.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
@@ -35,11 +41,16 @@ BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 #: benchmarked by default: the paper's seven-scheme set + native analogues
 BENCH_POLICIES = tuple(PAPER_POLICIES) + ("scan", "refcount")
 
+#: sweep axes (the paper's x-axis analogues at serving scale)
+SWEEP_DEPTHS = (1, 2, 4)
+SWEEP_SLOTS = (2, 4)
+
 
 def _drive(model, prompts, *, policy, max_new, warmup_prompts,
-           max_seq, repeats=3):
-    eng = ServingEngine(model, max_slots=4, max_seq=max_seq, policy=policy,
-                        pipeline_depth=3, extra_pages_per_slot=2)
+           max_seq, repeats=3, max_slots=4, pipeline_depth=3):
+    eng = ServingEngine(model, max_slots=max_slots, max_seq=max_seq,
+                        policy=policy, pipeline_depth=pipeline_depth,
+                        extra_pages_per_slot=2)
     # warm the prefill/decode compile caches so the timed section measures
     # the steady-state hot path, not XLA compilation
     for p in warmup_prompts:
@@ -95,16 +106,10 @@ def _drive(model, prompts, *, policy, max_new, warmup_prompts,
     }
 
 
-def run(policies=BENCH_POLICIES, n_requests: int = 16, max_new: int = 32,
-        seed: int = 0, max_seq: int = 2048, write_json: bool = False):
-    """Decode-heavy chat-shaped workload on the production-shaped cell:
-    ``max_seq=2048`` makes the block table 17 pages wide; the bucketed
-    ``n_kv`` bound keeps the KV sweep at the 1-2 pages these 40-200-token
-    prompts actually touch."""
-    model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
+def _workload(seed, n_requests, lo=40, hi=200):
     rs = np.random.RandomState(seed)
     prompts = [
-        list(rs.randint(1, 500, rs.randint(40, 200)).astype(int))
+        list(rs.randint(1, 500, rs.randint(lo, hi)).astype(int))
         for _ in range(n_requests)
     ]
     # warmup covers every prefill bucket (1, 2 blocks) and every decode
@@ -112,19 +117,104 @@ def run(policies=BENCH_POLICIES, n_requests: int = 16, max_new: int = 32,
     # pure steady-state (no XLA compiles)
     warmup = [
         list(rs.randint(1, 500, n).astype(int))
-        for n in (50, 120, 160, 199)
+        for n in (50, 120, 160, hi - 1)
     ]
+    return prompts, warmup
+
+
+def run(policies=BENCH_POLICIES, n_requests: int = 16, max_new: int = 32,
+        seed: int = 0, max_seq: int = 2048, write_json: bool = False):
+    """Decode-heavy chat-shaped workload on the production-shaped cell:
+    ``max_seq=2048`` makes the block table 17 pages wide; the bucketed
+    ``n_kv`` bound keeps the KV sweep at the 1-2 pages these 40-200-token
+    prompts actually touch."""
+    model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
+    prompts, warmup = _workload(seed, n_requests)
     rows = []
     for policy in policies:
         rows.append(_drive(model, prompts, policy=policy,
                            max_new=max_new, warmup_prompts=warmup,
                            max_seq=max_seq))
     if write_json:
-        BENCH_JSON.write_text(json.dumps(rows, indent=1))
+        _update_json(policies=rows)
     return rows
 
 
-if __name__ == "__main__":
-    for row in run(write_json=True):
+def run_sweep(policies=PAPER_POLICIES, depths=SWEEP_DEPTHS,
+              slot_counts=SWEEP_SLOTS, n_requests: int = 8,
+              max_new: int = 16, seed: int = 0, max_seq: int = 2048,
+              write_json: bool = False):
+    """Paper-style scaling sweep: per policy, vary pipeline depth (the
+    thread-count analogue — concurrent in-flight critical regions) and
+    slot count (concurrent sequences -> page-reference set size).  One
+    timed pass per cell (the sweep reads trends, not absolutes)."""
+    model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
+    prompts, warmup = _workload(seed, n_requests)
+    rows = []
+    for policy in policies:
+        for slots in slot_counts:
+            for depth in depths:
+                r = _drive(model, prompts, policy=policy, max_new=max_new,
+                           warmup_prompts=warmup, max_seq=max_seq,
+                           repeats=1, max_slots=slots,
+                           pipeline_depth=depth)
+                r["bench"] = "serving_sweep"
+                r["pipeline_depth"] = depth
+                r["slots"] = slots
+                rows.append(r)
+    if write_json:
+        _update_json(sweep=rows)
+    return rows
+
+
+def _update_json(policies=None, sweep=None) -> None:
+    """Merge-write BENCH_serving.json ({"policies": ..., "sweep": ...}),
+    preserving whichever section this run did not produce (and migrating
+    the PR 2 era bare-list schema)."""
+    data = {}
+    if BENCH_JSON.exists():
+        old = json.loads(BENCH_JSON.read_text())
+        data = {"policies": old} if isinstance(old, list) else old
+    if policies is not None:
+        data["policies"] = policies
+    if sweep is not None:
+        data["sweep"] = sweep
+    BENCH_JSON.write_text(json.dumps(data, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", default="",
+                    help='scaling axes, e.g. "pipeline_depth,slots" '
+                         "(runs the sweep INSTEAD of the default "
+                         "per-policy pass)")
+    ap.add_argument("--policies", default="",
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args()
+    write = not args.no_write
+    if args.sweep:
+        axes = {a.strip() for a in args.sweep.split(",") if a.strip()}
+        unknown = axes - {"pipeline_depth", "slots"}
+        if unknown:
+            ap.error(f"unknown sweep axes {sorted(unknown)}")
+        policies = (tuple(args.policies.split(","))
+                    if args.policies else PAPER_POLICIES)
+        rows = run_sweep(
+            policies=policies,
+            depths=SWEEP_DEPTHS if "pipeline_depth" in axes else (3,),
+            slot_counts=SWEEP_SLOTS if "slots" in axes else (4,),
+            write_json=write,
+        )
+    else:
+        policies = (tuple(args.policies.split(","))
+                    if args.policies else BENCH_POLICIES)
+        rows = run(policies=policies, write_json=write)
+    for row in rows:
         print(json.dumps(row))
-    print(f"# wrote {BENCH_JSON}")
+    if write:
+        print(f"# wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

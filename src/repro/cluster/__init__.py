@@ -1,0 +1,30 @@
+"""Cluster plane: multi-replica serving over per-replica stamp domains.
+
+See docs/cluster_serving.md.  Composition:
+
+  * :class:`ReplicaGroup`  — N ServingEngine replicas, sharded BlockPool,
+    shared params, one router (group.py);
+  * :class:`ClusterLedger` / :class:`ClusterHold` — cross-replica holds
+    entering every replica's stamp domain (ledger.py);
+  * routers — round-robin / least-loaded / prefix-affinity (router.py);
+  * :func:`migrate_prefix` — hold-protected prefix-cache migration
+    (migration.py).
+"""
+
+from .group import ReplicaGroup
+from .ledger import ClusterHold, ClusterLedger
+from .migration import migrate_prefix, prefix_keys
+from .router import (
+    ROUTERS,
+    LeastLoadedRouter,
+    PrefixAffinityRouter,
+    RoundRobinRouter,
+    Router,
+    make_router,
+)
+
+__all__ = [
+    "ReplicaGroup", "ClusterLedger", "ClusterHold", "Router",
+    "RoundRobinRouter", "LeastLoadedRouter", "PrefixAffinityRouter",
+    "ROUTERS", "make_router", "migrate_prefix", "prefix_keys",
+]

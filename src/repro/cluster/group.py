@@ -1,0 +1,187 @@
+"""ReplicaGroup: N data-parallel ServingEngines as one serving cluster.
+
+The fourth plane of the serving stack (above PR 2's policy / device /
+scheduler planes): each replica is a full ServingEngine with its own
+device arrays, its own BlockPool **shard** of the cluster's logical pool
+and its own reclamation **stamp domain** — a replica is to the cluster
+what a thread is to the paper's process.  The group composes:
+
+  * a :class:`~repro.cluster.router.Router` that admits requests
+    (round-robin / least-loaded-by-free-pages / prefix-affinity);
+  * a :class:`~repro.cluster.ledger.ClusterLedger` issuing cross-replica
+    holds for actors that span shards (checkpoint writer, prefix
+    migration);
+  * aggregate observability: cluster scan-steps/step is the number the
+    replica-scaling benchmark (benchmarks/cluster_bench.py) tracks —
+    stamp-it stays flat as replicas grow because every domain is local
+    and a cluster hold costs O(1) per replica.
+
+Params are shared: all replicas serve the same model, so ONE param tree
+is built and passed to every engine (device arrays for KV state stay
+per-replica).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from ..memory.block_pool import ShardedPoolSet
+from ..serving.engine import ServingEngine
+from ..serving.scheduler import Request
+from .ledger import ClusterHold, ClusterLedger
+from .router import Router, make_router
+
+
+class ReplicaGroup:
+    def __init__(
+        self,
+        model,
+        n_replicas: int = 2,
+        *,
+        policy: str = "stamp-it",
+        router: Any = "round-robin",
+        max_slots: int = 2,
+        max_seq: int = 256,
+        pipeline_depth: int = 2,
+        prefix_cache_entries: int = 0,
+        extra_pages_per_slot: int = 0,
+        seed: int = 0,
+        temperature: float = 0.0,
+        top_p: float = 1.0,
+        sample_seed: int = 0,
+    ) -> None:
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        if not isinstance(policy, str):
+            # a policy instance binds to ONE pool; replicas each need
+            # their own stamp domain, so only names are accepted here
+            raise ValueError(
+                "ReplicaGroup takes a policy NAME (each replica gets its "
+                "own fresh policy instance / stamp domain)"
+            )
+        self.model = model
+        self.policy_name = policy
+        self.shards = ShardedPoolSet(n_replicas)
+        params = model.init_params(seed)
+        self.engines: List[ServingEngine] = [
+            ServingEngine(
+                model,
+                max_slots=max_slots,
+                max_seq=max_seq,
+                policy=policy,
+                pipeline_depth=pipeline_depth,
+                prefix_cache_entries=prefix_cache_entries,
+                extra_pages_per_slot=extra_pages_per_slot,
+                seed=seed,
+                temperature=temperature,
+                top_p=top_p,
+                # decorrelate sampled streams across replicas
+                sample_seed=sample_seed + i,
+                replica_id=i,
+                params=params,
+                shard_set=self.shards,
+            )
+            for i in range(n_replicas)
+        ]
+        self.ledger = ClusterLedger(
+            [e.pool.policy for e in self.engines]
+        )
+        self.router: Router = make_router(router)
+        self.requests: List[Request] = []
+        #: routing decisions in submit order: [(rid-in-cluster, replica)]
+        self.route_trace: List[tuple] = []
+        self.steps = 0
+        self.checkpoints = 0
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    # ------------------------------------------------------------------
+    # request plane
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        r = self.router.pick(self, prompt)
+        req = self.engines[r].submit(prompt, max_new_tokens, eos_id)
+        self.route_trace.append((len(self.requests), r))
+        self.requests.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return any(e.sched.has_work() for e in self.engines)
+
+    def step(self) -> None:
+        """One cluster step: every replica with work advances one engine
+        step (data-parallel replicas run independent dispatch loops)."""
+        self.steps += 1
+        for eng in self.engines:
+            if eng.sched.has_work():
+                eng.step()
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        start = self.steps  # lifetime counter: bound THIS call's work
+        while self.has_work():
+            self.step()
+            if self.steps - start > max_steps:  # pragma: no cover
+                raise RuntimeError("cluster did not converge")
+        return [r for r in self.requests if r.done]
+
+    def drain(self) -> None:
+        for eng in self.engines:
+            eng.drain()
+
+    def reclaim(self) -> None:
+        """Best-effort maintenance across all shards (a few rounds, so
+        grace-period policies like native-epoch fully advance)."""
+        for _ in range(3):
+            for eng in self.engines:
+                eng.pool.reclaim()
+
+    # ------------------------------------------------------------------
+    # cross-replica actors
+    # ------------------------------------------------------------------
+    def hold(self, tag: str = "cluster-hold") -> ClusterHold:
+        """Enter every replica's stamp domain (see ClusterLedger)."""
+        return self.ledger.hold(tag)
+
+    def checkpoint(self) -> int:
+        """Checkpoint writer: snapshot the shared params under a
+        cluster-wide hold (the paper's long-lived critical region — the
+        writer must see a frozen page set on every replica while it
+        reads).  Returns the number of leaves snapshotted."""
+        with self.ledger.hold("checkpoint"):
+            leaves = jax.tree_util.tree_leaves(self.engines[0].dev.params)
+            # the device_get is the "write to stable storage" stand-in
+            n = sum(1 for _ in map(jax.device_get, leaves))
+        self.checkpoints += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        per = [e.stats() for e in self.engines]
+        engine_steps = sum(s["steps"] for s in per)
+        scans = sum(
+            s["pool_scan_steps"] + s["ledger_scan_steps"] for s in per
+        )
+        return {
+            "replicas": self.n_replicas,
+            "policy": self.policy_name,
+            "router": self.router.name,
+            "cluster_steps": self.steps,
+            "engine_steps": engine_steps,
+            "finished": sum(s["finished"] for s in per),
+            "scan_steps": scans,
+            "scan_steps_per_step": scans / max(engine_steps, 1),
+            "unreclaimed": self.shards.unreclaimed(),
+            "free_pages": self.shards.free_pages(),
+            "pages_total": self.shards.pages_total(),
+            "holds_issued": self.ledger.holds_issued,
+            "open_holds": self.ledger.open_holds,
+            "checkpoints": self.checkpoints,
+            "per_replica": per,
+        }

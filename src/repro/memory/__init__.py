@@ -1,21 +1,23 @@
-from .block_pool import BlockPool, PoolExhausted
+from .block_pool import BlockPool, PoolExhausted, ShardedPoolSet
 from .policy import (
     PAPER_POLICIES,
     POLICIES,
     CoreSchemeAdapter,
     EpochPolicy,
+    PolicyHold,
     ReclamationPolicy,
     RefcountPolicy,
     ScanPolicy,
     StampItPolicy,
     make_policy,
 )
-from .prefix_cache import PrefixCache, block_key
+from .prefix_cache import PrefixCache, block_key, prefix_block_keys
 from .stamp_ledger import StampLedger
 
 __all__ = [
-    "BlockPool", "PoolExhausted", "PrefixCache", "block_key",
-    "StampLedger", "ReclamationPolicy", "StampItPolicy", "EpochPolicy",
-    "ScanPolicy", "RefcountPolicy", "CoreSchemeAdapter", "POLICIES",
-    "PAPER_POLICIES", "make_policy",
+    "BlockPool", "PoolExhausted", "ShardedPoolSet", "PrefixCache",
+    "block_key", "prefix_block_keys", "StampLedger",
+    "ReclamationPolicy", "PolicyHold",
+    "StampItPolicy", "EpochPolicy", "ScanPolicy", "RefcountPolicy",
+    "CoreSchemeAdapter", "POLICIES", "PAPER_POLICIES", "make_policy",
 ]

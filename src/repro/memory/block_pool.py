@@ -17,12 +17,59 @@ from __future__ import annotations
 import threading
 from typing import List, Optional, Sequence, Union
 
-from .policy import ReclamationPolicy, make_policy
+from .policy import PolicyHold, ReclamationPolicy, make_policy
 from .stamp_ledger import StampLedger
 
 
 class PoolExhausted(RuntimeError):
     pass
+
+
+class ShardedPoolSet:
+    """Cluster-level view of a logical pool sharded one-BlockPool-per-
+    replica.
+
+    Hyaline-style locality (arXiv:1905.07903): retirement lists, free
+    lists and stamp domains all stay *per shard*, so reclamation work
+    never crosses a replica boundary; the set only aggregates capacity
+    and pressure signals for the router (least-loaded-by-free-pages) and
+    the cluster ledger's observability.  Each shard is a full
+    :class:`BlockPool` backed by its replica's own device arrays."""
+
+    def __init__(self, n_shards: int) -> None:
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        self.n_shards = n_shards
+        self.pools: List[Optional["BlockPool"]] = [None] * n_shards
+
+    def register(self, pool: "BlockPool") -> None:
+        sid = pool.shard_id
+        if not 0 <= sid < self.n_shards:
+            raise ValueError(
+                f"shard_id {sid} out of range for {self.n_shards} shards"
+            )
+        if self.pools[sid] is not None:
+            raise ValueError(f"shard {sid} already registered")
+        self.pools[sid] = pool
+
+    def _live(self) -> List["BlockPool"]:
+        return [p for p in self.pools if p is not None]
+
+    # -- aggregate observability / routing signals ----------------------
+    def free_pages(self) -> int:
+        return sum(p.free_pages_total() for p in self._live())
+
+    def pages_total(self) -> int:
+        return sum(p.n_slots * p.pages_per_slot for p in self._live())
+
+    def unreclaimed(self) -> int:
+        return sum(p.unreclaimed() for p in self._live())
+
+    def scan_steps(self) -> int:
+        return sum(p.scan_steps for p in self._live())
+
+    def ledger_scan_steps(self) -> int:
+        return sum(p.ledger_scan_steps for p in self._live())
 
 
 class BlockPool:
@@ -33,11 +80,16 @@ class BlockPool:
         *,
         policy: Union[str, ReclamationPolicy] = "stamp-it",
         ledger: Optional[StampLedger] = None,
+        shard_id: int = 0,
+        shard_set: Optional[ShardedPoolSet] = None,
     ) -> None:
         self.n_slots = n_slots
         self.pages_per_slot = pages_per_slot
         self.policy = make_policy(policy, ledger)
         self.policy_name = self.policy.name
+        # cluster plane: which replica's slice of the logical pool this is
+        self.shard_id = shard_id
+        self.shard_set = shard_set
         self._lock = threading.Lock()
         # ascending allocation order (pop from the end of a reversed list)
         self._free: List[List[int]] = [
@@ -46,6 +98,8 @@ class BlockPool:
         self.freed_total = 0
         self.reused_total = 0
         self.policy.bind(self)
+        if shard_set is not None:
+            shard_set.register(self)
 
     # ------------------------------------------------------------------
     # allocation
@@ -69,6 +123,11 @@ class BlockPool:
     def free_slot_pages(self, slot: int) -> int:
         with self._lock:
             return len(self._free[slot])
+
+    def free_pages_total(self) -> int:
+        """Router load signal: free pages across all slots of this shard."""
+        with self._lock:
+            return sum(len(f) for f in self._free)
 
     def _release_page(self, slot: int, page: int) -> None:
         """Policy callback: the page is safe — back on the free list."""
@@ -95,6 +154,11 @@ class BlockPool:
     def reclaim(self) -> None:
         """Best-effort maintenance (drain / teardown), not the hot path."""
         self.policy.reclaim()
+
+    def hold(self, tag: str = "hold") -> PolicyHold:
+        """Host-actor hold on this shard's stamp domain: pages retired
+        while it is open are not reclaimed until it releases."""
+        return self.policy.hold(tag)
 
     # ------------------------------------------------------------------
     # observability

@@ -41,6 +41,52 @@ from .stamp_ledger import StampLedger
 PageRef = Tuple[int, int]  # (slot, page)
 
 
+class PolicyHold:
+    """Handle for a host-actor hold on a policy's stamp domain.
+
+    Semantics (the paper's long-lived critical region, at page
+    granularity): pages retired anywhere in the policy's domain while the
+    hold is open must NOT be reclaimed until the hold releases — on top
+    of whatever the policy's own in-flight-step rules require.  The
+    cluster plane composes these per-replica holds into cross-replica
+    holds (:class:`repro.cluster.ClusterLedger`)."""
+
+    __slots__ = ("tag", "released", "_policy")
+
+    def __init__(self, policy: "ReclamationPolicy", tag: str) -> None:
+        self.tag = tag
+        self.released = False
+        self._policy = policy
+
+    def release(self) -> None:
+        if self.released:
+            return
+        self.released = True
+        self._do_release()
+        self._policy.holds_open -= 1
+
+    def _do_release(self) -> None:
+        raise NotImplementedError
+
+    def __enter__(self) -> "PolicyHold":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class _BufferedHold(PolicyHold):
+    """Generic hold: the policy buffers retires while any hold is open.
+
+    This is the crutch for schemes that cannot pin *unknown future*
+    pages (hazard pointers / LFRC protect only pages they can name, and
+    a hold must cover pages retired after it opened) — the exact
+    weakness the paper's region-based schemes avoid."""
+
+    def _do_release(self) -> None:
+        self._policy._close_buffered_hold(self)
+
+
 class ReclamationPolicy:
     """Strategy interface between the BlockPool and a reclamation scheme.
 
@@ -55,7 +101,13 @@ class ReclamationPolicy:
         any in-flight step (or host-actor hold) may still read them.
       * ``reclaim()``               — best-effort maintenance (drain /
         teardown / benchmark boundaries), never the hot path.
+      * ``hold(tag)``               — host-actor pin (checkpoint writer,
+        prefix migration): pages retired while the hold is open are not
+        reclaimed until it releases (see :class:`PolicyHold`).
 
+    Concrete policies implement ``_retire`` / ``_unreclaimed``; the
+    public ``retire_pages`` / ``unreclaimed`` wrappers add the
+    hold-buffering layer shared by every scheme that has no native pin.
     The policy returns pages through ``self.release(slot, page)`` which
     :meth:`bind` wires to the owning pool's free lists.
     """
@@ -65,6 +117,13 @@ class ReclamationPolicy:
     def __init__(self) -> None:
         self.release: Callable[[int, int], None] = lambda s, p: None
         self._bound_pool = None
+        # host-actor hold state (generic buffered implementation)
+        self._hold_lock = threading.Lock()
+        self._open_holds: Set[PolicyHold] = set()
+        self._held: List[Tuple[int, List[int]]] = []
+        self._held_pages = 0
+        self.holds_issued = 0
+        self.holds_open = 0
 
     def bind(self, pool) -> None:
         # a policy routes reclaimed pages to ONE pool's free lists;
@@ -86,13 +145,53 @@ class ReclamationPolicy:
 
     # -- retire / reclaim ----------------------------------------------
     def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+        """Retire; while any buffered hold is open, pages park in the
+        hold buffer and only enter the scheme's own retire path once the
+        last hold releases (local in-flight rules still apply after)."""
+        with self._hold_lock:
+            if self._open_holds:
+                pages = list(pages)
+                self._held.append((slot, pages))
+                self._held_pages += len(pages)
+                return
+        self._retire(slot, pages)
+
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
         raise NotImplementedError
 
     def reclaim(self) -> None:
         pass
 
+    # -- host-actor holds ----------------------------------------------
+    def hold(self, tag: str = "hold") -> PolicyHold:
+        """Open a hold on this policy's stamp domain (generic buffered
+        implementation; stamp-it and the region-based core schemes
+        override with native pins)."""
+        h = _BufferedHold(self, tag)
+        with self._hold_lock:
+            self._open_holds.add(h)
+        self.holds_issued += 1
+        self.holds_open += 1
+        return h
+
+    def _close_buffered_hold(self, h: PolicyHold) -> None:
+        with self._hold_lock:
+            self._open_holds.discard(h)
+            if self._open_holds:
+                return
+            buffered, self._held = self._held, []
+            self._held_pages = 0
+        for slot, pages in buffered:
+            self._retire(slot, pages)
+        self.reclaim()
+
     # -- observability --------------------------------------------------
     def unreclaimed(self) -> int:
+        with self._hold_lock:
+            held = self._held_pages
+        return held + self._unreclaimed()
+
+    def _unreclaimed(self) -> int:
         raise NotImplementedError
 
     @property
@@ -108,6 +207,24 @@ class ReclamationPolicy:
 # ---------------------------------------------------------------------------
 # Native device-plane policies (single-issuer tuned)
 # ---------------------------------------------------------------------------
+class _StampHold(PolicyHold):
+    """Native stamp-it hold: a stamp in the ledger's critical-region set.
+
+    Pages retired while it is open are tagged with stamps >= the hold's,
+    so ``reclaim`` skips them until the hold completes — no buffering, no
+    extra scan work (the hold costs O(1) to open and close, the paper's
+    headline property)."""
+
+    __slots__ = ("stamp",)
+
+    def __init__(self, policy: "StampItPolicy", tag: str) -> None:
+        super().__init__(policy, tag)
+        self.stamp = policy.ledger.issue(tag)
+
+    def _do_release(self) -> None:
+        self._policy.ledger.complete(self.stamp)
+
+
 class StampItPolicy(ReclamationPolicy):
     """The paper's scheme at the serving layer: retired pages are tagged
     with the highest stamp and parked on a stamp-sorted ring; reclamation
@@ -125,7 +242,7 @@ class StampItPolicy(ReclamationPolicy):
     def complete_step(self, handle: int) -> None:
         self.ledger.complete(handle)
 
-    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
         # one ledger lock acquisition for the whole batch
         self.ledger.retire_many(
             [lambda s=slot, p=p: self.release(s, p) for p in pages]
@@ -135,7 +252,13 @@ class StampItPolicy(ReclamationPolicy):
     def reclaim(self) -> None:
         self.ledger.reclaim()
 
-    def unreclaimed(self) -> int:
+    def hold(self, tag: str = "hold") -> PolicyHold:
+        h = _StampHold(self, tag)
+        self.holds_issued += 1
+        self.holds_open += 1
+        return h
+
+    def _unreclaimed(self) -> int:
         return self.ledger.unreclaimed()
 
     @property
@@ -170,7 +293,7 @@ class EpochPolicy(ReclamationPolicy):
             self._inflight_epoch.pop(handle, None)
         self._try_advance()
 
-    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
         with self._lock:
             self._limbo[self._epoch % 3].extend((slot, p) for p in pages)
 
@@ -190,7 +313,7 @@ class EpochPolicy(ReclamationPolicy):
     def reclaim(self) -> None:
         self._try_advance()
 
-    def unreclaimed(self) -> int:
+    def _unreclaimed(self) -> int:
         return sum(len(b) for b in self._limbo)
 
     @property
@@ -224,7 +347,7 @@ class ScanPolicy(ReclamationPolicy):
             self._inflight.pop(handle, None)
         self._scan_reclaim()
 
-    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
         with self._lock:
             self._pending.extend((slot, p) for p in pages)
         self._scan_reclaim()
@@ -247,7 +370,7 @@ class ScanPolicy(ReclamationPolicy):
     def reclaim(self) -> None:
         self._scan_reclaim()
 
-    def unreclaimed(self) -> int:
+    def _unreclaimed(self) -> int:
         return len(self._pending)
 
     @property
@@ -292,7 +415,7 @@ class RefcountPolicy(ReclamationPolicy):
         for slot, p in free:
             self.release(slot, p)
 
-    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
         free = []
         with self._lock:
             for p in pages:
@@ -304,7 +427,7 @@ class RefcountPolicy(ReclamationPolicy):
         for slot, p in free:
             self.release(slot, p)
 
-    def unreclaimed(self) -> int:
+    def _unreclaimed(self) -> int:
         return len(self._pending)
 
 
@@ -319,6 +442,20 @@ class _PageNode(ReclaimableNode):
     def __init__(self, ref: PageRef) -> None:
         super().__init__()
         self.ref = ref
+
+
+class _RegionHold(PolicyHold):
+    """Native adapter hold: a paper thread parked inside a critical
+    region, blocking the scheme's grace periods until released."""
+
+    __slots__ = ("_rec",)
+
+    def __init__(self, policy: "CoreSchemeAdapter", tag: str, rec) -> None:
+        super().__init__(policy, tag)
+        self._rec = rec
+
+    def _do_release(self) -> None:
+        self._policy._close_region_hold(self._rec)
 
 
 class CoreSchemeAdapter(ReclamationPolicy):
@@ -410,7 +547,7 @@ class CoreSchemeAdapter(ReclamationPolicy):
             self.reclaimer.flush()
 
     # -- retire / reclaim ----------------------------------------------
-    def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
         with self._lock:
             for p in pages:
                 ref = (slot, p)
@@ -424,7 +561,35 @@ class CoreSchemeAdapter(ReclamationPolicy):
         with self._lock:
             self.reclaimer.flush()
 
-    def unreclaimed(self) -> int:
+    # -- host-actor holds ----------------------------------------------
+    def hold(self, tag: str = "hold") -> PolicyHold:
+        """Region-based schemes (``protect_implies_safe``: epochs, QSR,
+        DEBRA, IBR, stamp-it-core) pin natively — a fresh paper-thread
+        enters a critical region and simply never quiesces until release,
+        which blocks grace periods for every page retired meanwhile.
+        Pointer-based schemes (hazard, LFRC) CANNOT name pages retired in
+        the future, so they fall back to the generic buffered hold — the
+        exact asymmetry the paper's long-lived-region scenario probes."""
+        if not self.reclaimer.protect_implies_safe:
+            return super().hold(tag)
+        with self._lock:
+            rec = self.reclaimer._acquire_record()
+            rec.region_depth = 1
+            self.reclaimer._enter_region(rec)
+        h = _RegionHold(self, tag, rec)
+        self.holds_issued += 1
+        self.holds_open += 1
+        return h
+
+    def _close_region_hold(self, rec) -> None:
+        with self._lock:
+            rec.region_depth = 0
+            self.reclaimer._leave_region(rec)
+            self.reclaimer._on_thread_detach(rec)
+            rec.in_use.store(0)
+            self.reclaimer.flush()
+
+    def _unreclaimed(self) -> int:
         with self._lock:
             return self.retired_pages - self.released_pages
 

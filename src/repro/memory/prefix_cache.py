@@ -22,6 +22,18 @@ def block_key(tokens: Sequence[int]) -> Tuple[int, ...]:
     return tuple(int(t) for t in tokens)
 
 
+def prefix_block_keys(prompt: Sequence[int],
+                      block: int) -> List[Tuple[int, ...]]:
+    """Cache keys for every full leading block of ``prompt`` — THE
+    definition of "a cached prefix", shared by admission (engine),
+    routing (prefix-affinity) and migration so they can never disagree
+    on what a prefix is."""
+    return [
+        block_key(prompt[: (i + 1) * block])
+        for i in range(len(prompt) // block)
+    ]
+
+
 class PrefixCacheEntry:
     __slots__ = ("slot", "page", "pins")
 
@@ -73,6 +85,52 @@ class PrefixCache:
         with self._lock:
             for e in entries:
                 e.pins -= 1
+
+    # -- cluster-plane probes (router affinity / migration) ------------
+    def get(self, key: Tuple) -> Optional[PrefixCacheEntry]:
+        """Stat-neutral lookup of a single key (no pin, no hit/miss)."""
+        with self._lock:
+            return self._map.get(key)
+
+    def match_len(self, keys: Sequence[Tuple]) -> int:
+        """Length of the leading cached run of ``keys`` — the router's
+        prefix-affinity signal.  Stat-neutral: probing every replica must
+        not skew the hit/miss counters admissions are measured by."""
+        n = 0
+        with self._lock:
+            for key in keys:
+                if key not in self._map:
+                    break
+                n += 1
+        return n
+
+    def acquire(self, keys: Sequence[Tuple]) -> List[PrefixCacheEntry]:
+        """Pin + return the leading cached run (stat-neutral ``lookup``,
+        for migration readers rather than admissions)."""
+        out: List[PrefixCacheEntry] = []
+        with self._lock:
+            for key in keys:
+                e = self._map.get(key)
+                if e is None:
+                    break
+                e.pins += 1
+                out.append(e)
+        return out
+
+    def remove(self, keys: Sequence[Tuple]) -> int:
+        """Evict specific keys (migration source dropping its copy);
+        pinned entries are skipped.  Pages retire through the policy."""
+        removed = 0
+        with self._lock:
+            for key in keys:
+                e = self._map.get(key)
+                if e is None or e.pins > 0:
+                    continue
+                del self._map[key]
+                self.pool.free(e.slot, [e.page])
+                self.evictions += 1
+                removed += 1
+        return removed
 
     # ------------------------------------------------------------------
     def insert(self, key: Tuple, slot: int, page: int) -> bool:

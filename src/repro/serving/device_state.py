@@ -119,6 +119,7 @@ class DeviceState:
         # dispatches-per-step ratio catches a reintroduced extra scatter.
         self.decode_dispatches = 0
         self.admission_dispatches = 0
+        self.migration_dispatches = 0  # cluster plane, cold path
 
         # ---- jitted device functions ----
         # n_kv is static: one compile per power-of-two page-sweep bucket.
@@ -129,9 +130,9 @@ class DeviceState:
             self._step_fn, donate_argnums=(1, 3, 4, 5, 6, 8),
             static_argnums=(20,),
         )
+        # fused prefill+KV-load, keyed by bucketed seq length: a classic
+        # admission is ONE dispatch (satellite of the PR 2 open item)
         self._prefill_cache: Dict[int, Any] = {}
-        self._loader = jax.jit(self._load_fn, donate_argnums=(0,),
-                               static_argnums=(4,))
         self._copier = jax.jit(self._copy_fn, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
@@ -194,7 +195,13 @@ class DeviceState:
     # ------------------------------------------------------------------
     # admission-plane bodies (per-request, not per-step)
     # ------------------------------------------------------------------
-    def _prefill_fn(self, params, tokens, last_index, first_buf, rng, slot):
+    def _prefill_fn(self, params, cache, tokens, last_index, first_buf,
+                    rng, slot, pages):
+        """Fused prefill: forward pass + first-token sample + KV scatter
+        into this slot's pages, in ONE dispatch.  ``pages`` always spans
+        the full power-of-two bucket (the caller pads spare entries with
+        the scratch page 0), so the compile cache stays keyed on the
+        bucketed seq length alone — O(log(max_seq/block)) entries."""
         logits, kv = self.model.prefill(
             params, {"tokens": tokens, "last_index": last_index}
         )
@@ -209,15 +216,10 @@ class DeviceState:
             first = sample_tokens(logits, u, self.temperature, self.top_p)
         else:
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return first_buf.at[slot].set(first[0]), first[0], kv, rng
-
-    def _load_fn(self, cache, k, v, slot, nb, pages):
-        """Scatter prefill KV (L,1,S,Hkv,D) into this slot's pages.
-
-        ``nb`` (static) trims the power-of-two prefill bucket back to the
-        pages actually allocated for the prompt."""
+        k, v = kv["k"], kv["v"]
         L = k.shape[0]
-        S = nb * self.block
+        S = tokens.shape[1]
+        nb = S // self.block  # full bucket; spare blocks land on page 0
         kp = cache["layers"]["k_pool"]
         kr = k[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
         vr = v[:, :, :S].reshape(L, nb, self.block, k.shape[3], k.shape[4])
@@ -225,8 +227,9 @@ class DeviceState:
         vp = cache["layers"]["v_pool"].at[:, slot, pages].set(
             vr.astype(kp.dtype)
         )
-        return dict(cache, layers=dict(
+        cache = dict(cache, layers=dict(
             cache["layers"], k_pool=kp, v_pool=vp))
+        return cache, first_buf.at[slot].set(first[0]), first[0], rng
 
     def _copy_fn(self, cache, src_slots, src_pages, dst_slot, dst_pages):
         kp = cache["layers"]["k_pool"]
@@ -253,26 +256,59 @@ class DeviceState:
     # ------------------------------------------------------------------
     # dispatch API
     # ------------------------------------------------------------------
-    def prefill(self, tokens_np: np.ndarray, last_index: int, slot: int):
-        """Bucketed prefill; returns (first-token device scalar, kv)."""
+    def prefill(self, tokens_np: np.ndarray, last_index: int, slot: int,
+                nb: int, pages) -> Any:
+        """Bucketed fused prefill + KV load: ONE dispatch per classic
+        admission.  Returns the first-token device scalar.
+
+        The scatter covers the whole bucket: blocks past the ``nb``
+        allocated ones write (garbage KV of the token padding) to the
+        scratch page 0, exactly like inactive-slot decode writes — so
+        ``pages`` has a bucket-static shape and the jit cache is keyed
+        on the bucketed seq length alone."""
         S = tokens_np.shape[1]
         if S not in self._prefill_cache:
-            self._prefill_cache[S] = jax.jit(self._prefill_fn,
-                                             donate_argnums=(3, 4))
-        self.first_buf, first, kv, self.rng = self._prefill_cache[S](
-            self.params, jnp.asarray(tokens_np),
-            jnp.asarray([last_index], jnp.int32), self.first_buf,
-            self.rng, np.int32(slot),
+            self._prefill_cache[S] = jax.jit(
+                self._prefill_fn, donate_argnums=(1, 4, 5),
+            )
+        padded = list(pages) + [0] * (S // self.block - nb)
+        self.cache, self.first_buf, first, self.rng = (
+            self._prefill_cache[S](
+                self.params, self.cache, jnp.asarray(tokens_np),
+                jnp.asarray([last_index], jnp.int32), self.first_buf,
+                self.rng, np.int32(slot),
+                jnp.asarray(padded, jnp.int32),
+            )
         )
         self.admission_dispatches += 1
-        return first, kv
+        return first
 
-    def load_prefill(self, kv, slot: int, nb: int, pages) -> None:
-        self.cache = self._loader(
-            self.cache, kv["k"], kv["v"], slot, nb,
-            jnp.asarray(pages, jnp.int32),
-        )
-        self.admission_dispatches += 1
+    # ------------------------------------------------------------------
+    # cluster-plane migration primitives (cold path: replicas own
+    # separate device arrays, so cross-replica moves go through the host)
+    # ------------------------------------------------------------------
+    def read_pages(self, slot: int, pages) -> Tuple[np.ndarray, np.ndarray]:
+        """Pull one slot's pages to host: (L, n, block, Hkv, D) k/v pair.
+        Synchronous by design — migration is not the hot path, and the
+        caller holds a cluster hold so the pages cannot be reclaimed."""
+        idx = jnp.asarray(pages, jnp.int32)
+        k = np.asarray(self.cache["layers"]["k_pool"][:, slot, idx])
+        v = np.asarray(self.cache["layers"]["v_pool"][:, slot, idx])
+        self.migration_dispatches += 1
+        return k, v
+
+    def write_pages(self, slot: int, pages, k: np.ndarray,
+                    v: np.ndarray) -> None:
+        """Install host KV blocks into this replica's pages."""
+        idx = jnp.asarray(pages, jnp.int32)
+        kp = self.cache["layers"]["k_pool"]
+        vp = self.cache["layers"]["v_pool"]
+        self.cache = dict(self.cache, layers=dict(
+            self.cache["layers"],
+            k_pool=kp.at[:, slot, idx].set(jnp.asarray(k, kp.dtype)),
+            v_pool=vp.at[:, slot, idx].set(jnp.asarray(v, vp.dtype)),
+        ))
+        self.migration_dispatches += 1
 
     def copy_pages(self, src_slots, src_pages, dst_slot, dst_pages) -> None:
         self.cache = self._copier(

@@ -36,8 +36,8 @@ import jax
 import numpy as np
 
 from ..configs.base import ShapeConfig
-from ..memory.block_pool import BlockPool, PoolExhausted
-from ..memory.prefix_cache import PrefixCache, block_key
+from ..memory.block_pool import BlockPool, PoolExhausted, ShardedPoolSet
+from ..memory.prefix_cache import PrefixCache, block_key, prefix_block_keys
 from ..models import Model
 from ..models.transformer import BLOCK_SIZE, cache_layout
 from .device_state import DeviceState
@@ -64,6 +64,9 @@ class ServingEngine:
         temperature: float = 0.0,
         top_p: float = 1.0,
         sample_seed: int = 0,
+        replica_id: int = 0,
+        params: Any = None,
+        shard_set: Optional[ShardedPoolSet] = None,
     ) -> None:
         cfg = model.cfg
         assert cache_layout(cfg) == "paged", (
@@ -76,9 +79,15 @@ class ServingEngine:
         self.block = BLOCK_SIZE
         self.mb = -(-max_seq // BLOCK_SIZE) + 1
         self.pipeline_depth = pipeline_depth
+        # cluster plane: which data-parallel replica this engine is; its
+        # pool is that replica's shard of the cluster's logical pool
+        self.replica_id = replica_id
 
         shape = ShapeConfig("engine", "decode", max_seq, max_slots)
-        params = model.init_params(seed)
+        if params is None:
+            # data-parallel replicas share ONE param tree (the group
+            # passes it in); standalone engines build their own
+            params = model.init_params(seed)
         cache = model.init_cache(shape, pool_slack=extra_pages_per_slot)
 
         # page 0 of each slot is the scratch page: inactive slots keep a
@@ -87,14 +96,15 @@ class ServingEngine:
         # is sized from the DEVICE pool dim (cache_specs may round pages
         # up for TP divisibility).
         pool_pages = int(cache["layers"]["k_pool"].shape[2])
-        self.pool = BlockPool(max_slots, pool_pages, policy=policy)
+        self.pool = BlockPool(max_slots, pool_pages, policy=policy,
+                              shard_id=replica_id, shard_set=shard_set)
         for s in range(max_slots):
             got = self.pool.alloc(s, 1)
             assert got == [0], "page 0 must be the scratch page"
         self.prefix_cache = PrefixCache(self.pool, prefix_cache_entries)
 
         self.sched = Scheduler(max_slots, self.mb, self.block,
-                               pipeline_depth)
+                               pipeline_depth, replica_id=replica_id)
         self.dev = DeviceState(
             model, params, cache, max_slots=max_slots, mb=self.mb,
             block=self.block, temperature=temperature, top_p=top_p,
@@ -107,6 +117,7 @@ class ServingEngine:
 
         self.steps = 0
         self.decode_steps = 0  # engine steps that dispatched decode work
+        self.admissions = 0  # requests admitted (each = ONE dispatch)
         self.host_ns = 0  # host-side bookkeeping time in _dispatch_decode
         self.backpressure_syncs = 0  # PoolExhausted -> force-sync events
 
@@ -141,9 +152,10 @@ class ServingEngine:
         return self.sched.submit(prompt, max_new_tokens, eos_id)
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        start = self.steps  # lifetime counter: bound THIS call's work
         while self.sched.has_work():
             self.step()
-            if self.steps > max_steps:  # pragma: no cover
+            if self.steps - start > max_steps:  # pragma: no cover
                 raise RuntimeError("engine did not converge")
         return self.sched.finished
 
@@ -170,6 +182,56 @@ class ServingEngine:
         self.pool.reclaim()
 
     # ------------------------------------------------------------------
+    # cluster-plane hooks (replica membership, migration, holds)
+    # ------------------------------------------------------------------
+    def hold(self, tag: str = "hold"):
+        """Pin this replica's stamp domain (see ReclamationPolicy.hold);
+        the ClusterLedger composes one of these per replica."""
+        return self.pool.hold(tag)
+
+    def export_prefix(self, keys: Sequence[tuple]) -> List[tuple]:
+        """Migration source: read the cached KV blocks for the leading
+        run of ``keys`` to host, pinned against eviction while reading.
+        Returns [(key, k, v), ...]; caller must hold a cluster hold so
+        the pages cannot be reclaimed between export and eviction."""
+        entries = self.prefix_cache.acquire(keys)
+        blocks = []
+        try:
+            for key, e in zip(keys, entries):
+                k, v = self.dev.read_pages(e.slot, [e.page])
+                blocks.append((key, k, v))
+        finally:
+            self.prefix_cache.unpin(entries)
+        return blocks
+
+    def import_prefix(self, blocks: Sequence[tuple]) -> int:
+        """Migration destination: install exported KV blocks into this
+        replica's pool + prefix cache.  Returns #blocks imported (stops
+        early on pool exhaustion; already-cached keys are skipped)."""
+        n = 0
+        for key, k, v in blocks:
+            if self.prefix_cache.get(key) is not None:
+                continue
+            slot = max(range(self.max_slots),
+                       key=self.pool.free_slot_pages)
+            try:
+                (page,) = self.pool.alloc(slot, 1)
+            except PoolExhausted:
+                break
+            self.dev.write_pages(slot, [page], k, v)
+            if self.prefix_cache.insert(key, slot, page):
+                n += 1
+            else:  # cache full of pinned entries: give the page back
+                self.pool.free(slot, [page])
+        return n
+
+    def evict_prefix(self, keys: Sequence[tuple]) -> int:
+        """Migration source, after a successful import: drop the moved
+        entries (their pages RETIRE through the policy — under an open
+        cluster hold they stay unreclaimed until it releases)."""
+        return self.prefix_cache.remove(keys)
+
+    # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
     def _admit(self, req: Request) -> bool:
@@ -177,10 +239,7 @@ class ServingEngine:
         prompt = req.prompt
         n_blocks = max(-(-len(prompt) // self.block), 1)
         # prefix-cache lookup over full prompt blocks
-        keys = [
-            block_key(prompt[: (i + 1) * self.block])
-            for i in range(len(prompt) // self.block)
-        ]
+        keys = prefix_block_keys(prompt, self.block)
         hits = self.prefix_cache.lookup(keys) if keys else []
         try:
             pages = self.pool.alloc(slot, n_blocks)
@@ -191,7 +250,12 @@ class ServingEngine:
         # keep at least the final prompt token out of the "hit" span so a
         # fully-cached prompt still runs one forced step to emit token 1
         n_hit_tokens = min(len(hits) * self.block, len(prompt) - 1)
-        if hits:
+        suffix = prompt[n_hit_tokens:]
+        # replay only pays off for short suffixes; a long one takes the
+        # classic prefill, which rewrites EVERY page — copying the hit
+        # pages first would be wasted work (and a second dispatch)
+        use_replay = bool(n_hit_tokens) and len(suffix) <= 2 * self.block
+        if use_replay:
             self.dev.copy_pages(
                 [e.slot for e in hits], [e.page for e in hits],
                 slot, pages[: len(hits)],
@@ -201,8 +265,7 @@ class ServingEngine:
         self._refs_dirty = True
         req._first_dev = None  # type: ignore[attr-defined]
 
-        suffix = prompt[n_hit_tokens:]
-        if n_hit_tokens and len(suffix) <= 2 * self.block:
+        if use_replay:
             # short suffix after a cache hit: teacher-force through decode
             self.sched.bind_slot(req, slot, pages, n_hit_tokens)
             req._tf_suffix = list(suffix)  # type: ignore[attr-defined]
@@ -211,13 +274,16 @@ class ServingEngine:
         else:
             # classic prefill, bucketed to a power-of-two block count so
             # the compile cache is O(log(max_seq/block)) instead of one
-            # entry per distinct prompt-block count
+            # entry per distinct prompt-block count.  Forward pass,
+            # first-token sample AND the KV scatter into this slot's
+            # pages are ONE fused dispatch (admission_dispatches == 1
+            # per admission, asserted in tests/test_engine.py).
             nb_bucket = _pow2_bucket(n_blocks)
             S = nb_bucket * self.block
             pad = S - len(prompt)
             toks = np.asarray(prompt + [0] * pad, np.int32)[None]
-            first_dev, kv = self.dev.prefill(toks, len(prompt) - 1, slot)
-            self.dev.load_prefill(kv, slot, n_blocks, pages)
+            first_dev = self.dev.prefill(toks, len(prompt) - 1, slot,
+                                         n_blocks, pages)
             # token 1 stays on device (in the prefill first-token buffer,
             # which the fused step reads); the host materializes it at
             # the first pipeline-lagged completion for this request
@@ -227,6 +293,7 @@ class ServingEngine:
             self.dev.stage_admit(slot, len(prompt),
                                  self.sched.block_table[slot], n_blocks,
                                  token_from_buf=True, set_token=True)
+        self.admissions += 1
         return True
 
     # ------------------------------------------------------------------
@@ -346,8 +413,11 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
         return {
+            "replica_id": self.replica_id,
             "steps": self.steps,
             "finished": len(self.sched.finished),
+            "admissions": self.admissions,
+            "free_pages": self.pool.free_pages_total(),
             # includes the device plane's operand-staging time so the
             # fused step's host cost is measured, not hidden
             "host_us_per_step": (

@@ -29,6 +29,7 @@ class Request:
     eos_id: Optional[int] = None
     # runtime state
     slot: int = -1
+    replica: int = -1  # which cluster replica is serving this request
     generated: Optional[List[int]] = None
     n_pages: int = 0
     done: bool = False
@@ -38,8 +39,9 @@ class Request:
 
 class Scheduler:
     def __init__(self, max_slots: int, mb: int, block: int,
-                 pipeline_depth: int) -> None:
+                 pipeline_depth: int, *, replica_id: int = 0) -> None:
         self.max_slots = max_slots
+        self.replica_id = replica_id
         self.mb = mb
         self.block = block
         self.pipeline_depth = pipeline_depth
@@ -61,6 +63,7 @@ class Scheduler:
                eos_id: Optional[int]) -> Request:
         req = Request(self._next_rid, list(map(int, prompt)),
                       max_new_tokens, eos_id)
+        req.replica = self.replica_id
         req.submitted_at = time.time()
         self._next_rid += 1
         self.waiting.append(req)
@@ -68,6 +71,10 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.active or self.inflight)
+
+    def queue_depth(self) -> int:
+        """Router load signal: requests not yet fully served here."""
+        return len(self.waiting) + len(self.active) + len(self.inflight)
 
     def pipeline_full(self) -> bool:
         return len(self.inflight) >= self.pipeline_depth

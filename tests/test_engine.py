@@ -93,6 +93,11 @@ def test_engine_matches_reference(model):
     # the fused hot path: admission, growth, teacher-forcing, decode and
     # sampling fold into exactly ONE device dispatch per engine step
     assert eng.stats()["dispatches_per_step"] == 1
+    # ... and the admission plane is fused too: prefill forward pass,
+    # first-token sample AND the KV load into the slot's pages are ONE
+    # dispatch per admitted request (the _load_fn fold)
+    assert eng.stats()["admissions"] == 3
+    assert eng.stats()["admission_dispatches"] == eng.stats()["admissions"]
 
 
 @pytest.mark.parametrize("policy", ALL_POLICIES)
@@ -112,6 +117,7 @@ def test_policy_invariance(model, policy):
     ref = _POLICY_REFERENCE.setdefault("tokens", key)
     assert key == ref
     assert eng.stats()["dispatches_per_step"] == 1
+    assert eng.stats()["admission_dispatches"] == eng.stats()["admissions"]
     # after drain, every policy but native-epoch fully reclaims (epoch
     # needs two more grace periods by design)
     if policy != "epoch":
@@ -173,6 +179,27 @@ def test_prefix_cache_reuse_slot0(model):
     assert eng.prefix_cache.hits >= 2
     assert r1.generated == want
     assert r2.generated == want, (r2.generated, want)
+
+
+def test_prefix_hit_long_suffix_classic_path(model):
+    """A cached-prefix prompt whose suffix is too long for replay takes
+    the classic prefill WITHOUT a wasted hit-page copy: admission stays
+    one dispatch, and the output matches the no-cache reference."""
+    rs = np.random.RandomState(31)
+    prefix = list(rs.randint(1, 500, BLOCK_SIZE).astype(int))
+    p1 = prefix + list(rs.randint(1, 500, 5).astype(int))
+    p2 = prefix + list(rs.randint(1, 500, 2 * BLOCK_SIZE + 9).astype(int))
+    want = reference_generate(model, p2, 4)
+    eng = ServingEngine(model, max_slots=1, max_seq=MAX_SEQ,
+                        prefix_cache_entries=8, extra_pages_per_slot=6)
+    eng.submit(p1, max_new_tokens=3)
+    eng.run_until_done()
+    r2 = eng.submit(p2, max_new_tokens=4)
+    eng.run_until_done()
+    eng.drain()
+    assert eng.prefix_cache.hits >= 1  # p2's first block hit the cache
+    assert r2.generated == want
+    assert eng.stats()["admission_dispatches"] == eng.stats()["admissions"]
 
 
 def test_sampled_mode_on_device(model):
