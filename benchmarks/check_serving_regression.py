@@ -9,7 +9,13 @@ Gates, in order:
   2. **sweep schema** — if the baseline has a ``sweep`` section, its
      rows must be well-formed and single-dispatch; an absent section is
      a SKIP, not an error.
-  3. **cluster flatness** — if ``BENCH_cluster.json`` exists, stamp-it's
+  3. **long-prompt TTFT** — if the baseline has a ``long_prompt``
+     section, the chunked stamp-it short-request p99 TTFT must stay flat
+     as the injected prompt grows (max/min <= ``TTFT_FLATNESS_GATE``,
+     default 3x — bounded TTFT independent of prompt length beyond one
+     chunk), and every chunked row must still be one fused dispatch per
+     step; an absent section is a SKIP.
+  4. **cluster flatness** — if ``BENCH_cluster.json`` exists, stamp-it's
      scan-steps/step must stay flat (max/min <= the recorded gate,
      default 2x) from 1 to N replicas while the periodic checkpoint hold
      is active; an absent file/section is a SKIP.
@@ -21,8 +27,9 @@ Gates, in order:
 
 Regenerate baselines after an intentional perf change with
 ``python -m benchmarks.serving_bench`` (add ``--sweep
-pipeline_depth,slots`` for the sweep section) and
-``python -m benchmarks.cluster_bench``, then commit the JSONs.
+pipeline_depth,slots`` for the sweep section, ``--long-prompt`` for the
+TTFT section) and ``python -m benchmarks.cluster_bench``, then commit
+the JSONs.
 ``SERVING_BENCH_TOLERANCE`` (a float, e.g. ``0.25``) can widen the
 throughput gate on noisy shared runners.
 """
@@ -86,6 +93,41 @@ def _check_sweep(baseline) -> int:
     return 0
 
 
+def _check_long_prompt(baseline) -> int:
+    rows = baseline.get("long_prompt")
+    if not rows:
+        print("SKIP: no 'long_prompt' section in baseline (run "
+              "`serving_bench --long-prompt` to add one)")
+        return 0
+    gate = float(os.environ.get("TTFT_FLATNESS_GATE", "3.0"))
+    chunked = [r for r in rows if r.get("mode") == "chunked"]
+    bad = [r for r in chunked
+           if r.get("dispatches_per_step") != 1.0
+           or "short_ttft_p99_ms" not in r
+           or "long_prompt_tokens" not in r]
+    if bad:
+        print(f"FAIL: {len(bad)}/{len(chunked)} chunked long-prompt rows "
+              f"malformed or multi-dispatch (first: {bad[0]})")
+        return 1
+    vals = {r["long_prompt_tokens"]: r["short_ttft_p99_ms"]
+            for r in chunked if r.get("policy") == "stamp-it"}
+    if len(vals) < 2:
+        print("SKIP: long_prompt section has < 2 stamp-it chunked "
+              "prompt lengths")
+        return 0
+    ratio = max(vals.values()) / max(min(vals.values()), 1e-9)
+    print(f"stamp-it chunked short-request p99 TTFT by long-prompt "
+          f"tokens: {dict(sorted(vals.items()))} ms -> "
+          f"max/min={ratio:.3f} (gate: <= {gate})")
+    if ratio > gate:
+        print(f"FAIL: chunked p99 TTFT grows with prompt length "
+              f"({ratio:.2f}x > {gate}x) — chunked prefill no longer "
+              f"bounds head-of-line blocking")
+        return 1
+    print("OK: chunked p99 TTFT flat in prompt length")
+    return 0
+
+
 def _check_cluster() -> int:
     if not BENCH_CLUSTER_JSON.exists():
         print("SKIP: no BENCH_cluster.json (run "
@@ -126,6 +168,9 @@ def main() -> int:
     if rc:
         return rc
     rc = _check_sweep(baseline)
+    if rc:
+        return rc
+    rc = _check_long_prompt(baseline)
     if rc:
         return rc
     return _check_cluster()

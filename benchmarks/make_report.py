@@ -227,6 +227,31 @@ def sweep_table():
     return "\n".join(lines)
 
 
+def long_prompt_table():
+    """Chunked-prefill TTFT workload: short-request p99 TTFT while a
+    long prompt is admitted.  Chunked mode must be ~flat in the long
+    prompt's length; unchunked grows with it (head-of-line blocking)."""
+    data = _load_serving_json()
+    if data is None or not data.get("long_prompt"):
+        return ("(no long_prompt section — run "
+                "`serving_bench --long-prompt`)")
+    rows = data["long_prompt"]
+    lines = [
+        "| policy | mode | long prompt | short p99 TTFT ms | "
+        "short p50 TTFT ms | long TTFT ms | steps/s | "
+        "scan-steps/step |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["policy"], x["mode"],
+                                         x["long_prompt_tokens"])):
+        lines.append(
+            f"| {r['policy']} | {r['mode']} | "
+            f"{r['long_prompt_tokens']} | {r['short_ttft_p99_ms']} | "
+            f"{r['short_ttft_p50_ms']} | {r['long_ttft_ms']} | "
+            f"{r['steps_per_s']:.0f} | {r['scan_steps_per_step']} |")
+    return "\n".join(lines)
+
+
 def cluster_table():
     """Replica-scaling (cluster plane): scan-steps/step must stay flat
     for stamp-it from 1..N replicas with a periodic checkpoint hold."""
@@ -275,6 +300,8 @@ def main():
              serving_stack_table)
     _section("Serving scaling sweep (pipeline depth x slots)",
              sweep_table)
+    _section("Chunked prefill: long-prompt TTFT (head-of-line blocking)",
+             long_prompt_table)
     _section("Cluster plane: replica scaling under checkpoint holds",
              cluster_table)
 

@@ -12,14 +12,18 @@ Every row also records ``dispatches_per_step`` (== 1.0 on the fused hot
 path).
 
 ``python -m benchmarks.serving_bench`` writes ``BENCH_serving.json`` at
-the repo root — schema ``{"policies": [...], "sweep": [...]}`` — the
-serving-perf trajectory baseline that
+the repo root — schema ``{"policies": [...], "sweep": [...],
+"long_prompt": [...]}`` — the serving-perf trajectory baseline that
 ``benchmarks/check_serving_regression.py`` gates CI against (>10%
-stamp-it steps/sec drop fails the workflow).  ``--sweep
-pipeline_depth,slots`` additionally emits the paper-style scaling rows
-(pipeline depth is the serving analogue of the paper's thread count:
-in-flight steps = concurrent critical regions), rendered as a table by
-``benchmarks/make_report.py``.
+stamp-it steps/sec drop fails the workflow; long-prompt p99 TTFT must
+stay flat in prompt length).  ``--sweep pipeline_depth,slots``
+additionally emits the paper-style scaling rows (pipeline depth is the
+serving analogue of the paper's thread count: in-flight steps =
+concurrent critical regions); ``--long-prompt`` emits the chunked-vs-
+unchunked TTFT workload (one long prompt injected into continuous short
+traffic).  Sections are merge-written ROW-wise with stale-row pruning:
+a policy or bench that no longer exists cannot leave ghost rows for
+``benchmarks/make_report.py`` to render.
 """
 
 from __future__ import annotations
@@ -27,12 +31,13 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from collections import deque
 from pathlib import Path
 
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
-from repro.memory import PAPER_POLICIES
+from repro.memory import PAPER_POLICIES, POLICIES
 from repro.models import Model
 from repro.serving import ServingEngine
 
@@ -45,12 +50,28 @@ BENCH_POLICIES = tuple(PAPER_POLICIES) + ("scan", "refcount")
 SWEEP_DEPTHS = (1, 2, 4)
 SWEEP_SLOTS = (2, 4)
 
+#: long-prompt TTFT workload (chunked-prefill tentpole)
+LONG_PROMPT_LENS = (512, 1024)
+LONG_PROMPT_POLICIES = ("stamp-it", "hazard", "debra")
+
+#: bench names this tool can produce — merge-written sections prune rows
+#: whose bench/policy no longer exists (no ghost rows in the report)
+KNOWN_BENCHES = {"serving_pool", "serving_sweep", "serving_long_prompt"}
+
+
+def _pct(sorted_ms, q):
+    if not sorted_ms:
+        return 0.0
+    return round(float(np.percentile(sorted_ms, q)), 2)
+
 
 def _drive(model, prompts, *, policy, max_new, warmup_prompts,
-           max_seq, repeats=3, max_slots=4, pipeline_depth=3):
+           max_seq, repeats=3, max_slots=4, pipeline_depth=3,
+           chunk_tokens=None):
+    kw = {} if chunk_tokens is None else {"chunk_tokens": chunk_tokens}
     eng = ServingEngine(model, max_slots=max_slots, max_seq=max_seq,
                         policy=policy, pipeline_depth=pipeline_depth,
-                        extra_pages_per_slot=2)
+                        extra_pages_per_slot=2, **kw)
     # warm the prefill/decode compile caches so the timed section measures
     # the steady-state hot path, not XLA compilation
     for p in warmup_prompts:
@@ -66,11 +87,12 @@ def _drive(model, prompts, *, policy, max_new, warmup_prompts,
     best = None
     for _ in range(repeats):
         st0 = eng.stats()
+        fin0 = len(eng.finished)
         peak = 0
         for p in prompts:
             eng.submit(p, max_new_tokens=max_new)
         t0 = time.perf_counter()
-        while eng.waiting or eng.active or eng._inflight:
+        while eng.sched.has_work():
             eng.step()
             peak = max(peak, eng.pool.unreclaimed())
         dt = time.perf_counter() - t0
@@ -84,9 +106,13 @@ def _drive(model, prompts, *, policy, max_new, warmup_prompts,
              - st0["host_us_per_step"] * st0["steps"])
             / max(d["steps"], 1)
         )
+        ttfts = sorted(
+            (r.first_token_at - r.submitted_at) * 1e3
+            for r in eng.finished[fin0:]
+        )
         if best is None or dt < best[0]:
-            best = (dt, d, host_us, peak)
-    dt, d, host_us, peak = best
+            best = (dt, d, host_us, peak, ttfts)
+    dt, d, host_us, peak, ttfts = best
     scans = d["pool_scan_steps"] + d["ledger_scan_steps"]
     return {
         "bench": "serving_pool",
@@ -96,6 +122,9 @@ def _drive(model, prompts, *, policy, max_new, warmup_prompts,
         "steps_per_s": round(d["steps"] / dt, 2),
         "host_us_per_step": round(host_us, 2),
         "dispatches_per_step": eng.stats()["dispatches_per_step"],
+        "chunk_tokens": eng.chunk_tokens,
+        "ttft_p50_ms": _pct(ttfts, 50),
+        "ttft_p99_ms": _pct(ttfts, 99),
         "peak_unreclaimed_pages": peak,
         "final_unreclaimed": eng.pool.unreclaimed(),
         "ledger_scan_steps": d["ledger_scan_steps"],
@@ -167,18 +196,142 @@ def run_sweep(policies=PAPER_POLICIES, depths=SWEEP_DEPTHS,
     return rows
 
 
-def _update_json(policies=None, sweep=None) -> None:
-    """Merge-write BENCH_serving.json ({"policies": ..., "sweep": ...}),
-    preserving whichever section this run did not produce (and migrating
-    the PR 2 era bare-list schema)."""
+def _drive_long(model, *, policy, chunk_tokens, long_len, n_short,
+                max_new, seed, max_seq, repeats=3):
+    """Continuous short traffic with ONE long prompt injected mid-stream:
+    the TTFT of the short requests arriving at/after the injection is the
+    head-of-line-blocking signal the chunked tentpole bounds.  Best-of-N
+    passes on the SAME engine: the first pass doubles as the compile
+    warmup (every n_kv bucket x chunk-lane variant the scenario reaches),
+    and the minimum-wall-time pass supplies every reported metric."""
+    eng = ServingEngine(model, max_slots=4, max_seq=max_seq, policy=policy,
+                        pipeline_depth=3, chunk_tokens=chunk_tokens,
+                        extra_pages_per_slot=2)
+    rs = np.random.RandomState(seed)
+    shorts = [
+        list(rs.randint(1, 500, rs.randint(40, 120)).astype(int))
+        for _ in range(n_short)
+    ]
+    long_prompt = list(rs.randint(1, 500, long_len).astype(int))
+
+    best = None
+    for rep in range(repeats + 1):  # pass 0 = warmup, discarded
+        fin0 = len(eng.finished)
+        st0 = eng.stats()
+        pending = deque(shorts)
+        # clamp so the long prompt is always injected even for tiny
+        # n_short (submitted can never exceed len(shorts))
+        inject_at, submitted = min(3, n_short), 0
+        long_req = None
+        t0 = time.perf_counter()
+        while True:
+            if long_req is None and submitted >= inject_at:
+                long_req = eng.submit(long_prompt, max_new_tokens=max_new)
+            elif pending:
+                eng.submit(pending.popleft(), max_new_tokens=max_new)
+                submitted += 1
+            if not (pending or long_req is None or eng.sched.has_work()):
+                break
+            eng.step()
+        dt = time.perf_counter() - t0
+        eng.drain()
+        st1 = eng.stats()
+        if rep == 0:
+            continue
+        d = {k: st1[k] - st0[k] for k in
+             ("steps", "pool_scan_steps", "ledger_scan_steps",
+              "prefill_chunks", "chunk_backpressure")}
+        scans = d["pool_scan_steps"] + d["ledger_scan_steps"]
+        blocked = [
+            r for r in eng.finished[fin0:]
+            if r is not long_req
+            and r.submitted_at >= long_req.submitted_at
+        ]
+        ttfts = sorted((r.first_token_at - r.submitted_at) * 1e3
+                       for r in blocked)
+        long_ttft = (long_req.first_token_at - long_req.submitted_at) * 1e3
+        if best is None or dt < best[0]:
+            best = (dt, d, scans, ttfts, long_ttft, len(blocked))
+    dt, d, scans, ttfts, long_ttft, n_blocked = best
+    return {
+        "bench": "serving_long_prompt",
+        "policy": policy,
+        "mode": "chunked" if chunk_tokens else "unchunked",
+        "chunk_tokens": chunk_tokens,
+        "long_prompt_tokens": long_len,
+        "short_requests": n_blocked,
+        "short_ttft_p50_ms": _pct(ttfts, 50),
+        "short_ttft_p99_ms": _pct(ttfts, 99),
+        "long_ttft_ms": round(long_ttft, 2),
+        "steps_per_s": round(d["steps"] / max(dt, 1e-9), 2),
+        "scan_steps_per_step": round(scans / max(d["steps"], 1), 3),
+        "dispatches_per_step": eng.stats()["dispatches_per_step"],
+        "prefill_chunks": d["prefill_chunks"],
+        "chunk_backpressure": d["chunk_backpressure"],
+    }
+
+
+def run_long_prompt(policies=LONG_PROMPT_POLICIES,
+                    long_lens=LONG_PROMPT_LENS, n_short: int = 12,
+                    max_new: int = 8, seed: int = 0, max_seq: int = 2048,
+                    write_json: bool = False):
+    """Chunked-vs-unchunked TTFT under a long-prompt injection, per
+    policy: chunked mode must keep short-request p99 TTFT flat in the
+    long prompt's length (it only ever waits for ONE chunk), and
+    stamp-it's scan-steps/step flat in the chunk count, while hazard/
+    debra pay per-chunk guard/record bookkeeping — the paper's
+    amortization argument at admission granularity."""
+    model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
+    rows = []
+    for policy in policies:
+        for long_len in long_lens:
+            for chunk_tokens in (128, 0):
+                rows.append(_drive_long(
+                    model, policy=policy, chunk_tokens=chunk_tokens,
+                    long_len=long_len, n_short=n_short, max_new=max_new,
+                    seed=seed, max_seq=max_seq))
+    if write_json:
+        _update_json(long_prompt=rows)
+    return rows
+
+
+def _row_key(row):
+    """Identity of a bench row inside a section (merge/prune unit)."""
+    return (row.get("bench"), row.get("policy"),
+            row.get("pipeline_depth"), row.get("slots"),
+            row.get("mode"), row.get("long_prompt_tokens"))
+
+
+def _merge_section(old_rows, new_rows):
+    """Row-level merge: rows re-produced by this run replace their old
+    versions; surviving old rows are PRUNED unless their policy still
+    exists in the registry and their bench is still produced by this
+    tool — a renamed/removed policy or bench can no longer leave ghost
+    rows behind for the report to render forever."""
+    new_keys = {_row_key(r) for r in new_rows}
+    kept = [
+        r for r in (old_rows or [])
+        if _row_key(r) not in new_keys
+        and r.get("policy") in POLICIES
+        and r.get("bench") in KNOWN_BENCHES
+    ]
+    return kept + list(new_rows)
+
+
+def _update_json(policies=None, sweep=None, long_prompt=None) -> None:
+    """Merge-write BENCH_serving.json ({"policies", "sweep",
+    "long_prompt"}), preserving sections this run did not produce and
+    merging rows (by bench/policy/axis key) within the sections it did —
+    with stale rows pruned (see _merge_section).  Migrates the PR 2 era
+    bare-list schema."""
     data = {}
     if BENCH_JSON.exists():
         old = json.loads(BENCH_JSON.read_text())
         data = {"policies": old} if isinstance(old, list) else old
-    if policies is not None:
-        data["policies"] = policies
-    if sweep is not None:
-        data["sweep"] = sweep
+    for name, rows in (("policies", policies), ("sweep", sweep),
+                       ("long_prompt", long_prompt)):
+        if rows is not None:
+            data[name] = _merge_section(data.get(name), rows)
     BENCH_JSON.write_text(json.dumps(data, indent=1))
 
 
@@ -188,6 +341,15 @@ def main() -> None:
                     help='scaling axes, e.g. "pipeline_depth,slots" '
                          "(runs the sweep INSTEAD of the default "
                          "per-policy pass)")
+    ap.add_argument("--long-prompt", action="store_true",
+                    help="run the long-prompt TTFT workload (chunked vs "
+                         "unchunked head-of-line blocking) INSTEAD of "
+                         "the default per-policy pass")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small long-prompt run for CI (stamp-it only, "
+                         "shorter prompts); never writes the baseline — "
+                         "smoke-config rows measured under different "
+                         "load must not merge next to full-run rows")
     ap.add_argument("--policies", default="",
                     help="comma-separated subset (default: all)")
     ap.add_argument("--no-write", action="store_true")
@@ -206,6 +368,17 @@ def main() -> None:
             slot_counts=SWEEP_SLOTS if "slots" in axes else (4,),
             write_json=write,
         )
+    elif args.long_prompt:
+        policies = (tuple(args.policies.split(","))
+                    if args.policies else LONG_PROMPT_POLICIES)
+        if args.smoke:
+            write = False  # see --smoke help: never pollute the baseline
+            rows = run_long_prompt(policies=("stamp-it",),
+                                   long_lens=(256, 512), n_short=6,
+                                   max_new=4, max_seq=1024,
+                                   write_json=False)
+        else:
+            rows = run_long_prompt(policies=policies, write_json=write)
     else:
         policies = (tuple(args.policies.split(","))
                     if args.policies else BENCH_POLICIES)

@@ -30,6 +30,13 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=6)
     ap.add_argument("--checkpoint-every", type=int, default=5,
                     help="cluster steps between checkpoint-writer holds")
+    ap.add_argument("--chunk-tokens", type=int, default=128,
+                    help="prefill chunk size in tokens, a multiple of "
+                         "the 128-token KV page (default: 128 — chunked "
+                         "prefill inside every replica's fused step; "
+                         "the least-loaded router counts a replica's "
+                         "unprefilled remainder as load); 0 = legacy "
+                         "whole-prompt prefill dispatch")
     ap.add_argument("--no-migration", action="store_true")
     args = ap.parse_args()
 
@@ -38,6 +45,7 @@ def main() -> None:
         model, args.replicas, policy=args.policy, router=args.router,
         max_slots=2, max_seq=512, pipeline_depth=2,
         prefix_cache_entries=16, extra_pages_per_slot=4,
+        chunk_tokens=args.chunk_tokens,
     )
 
     from repro.models.transformer import BLOCK_SIZE

@@ -26,6 +26,12 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--chunk-tokens", type=int, default=128,
+                    help="prefill chunk size in tokens, a multiple of "
+                         "the 128-token KV page (default: 128 — chunked "
+                         "prefill inside the fused step, one compiled "
+                         "chunk shape, bounded TTFT); 0 = legacy "
+                         "whole-prompt prefill dispatch")
     args = ap.parse_args()
 
     model = Model(smoke_config(ARCHS["granite-3-8b"]))
@@ -33,6 +39,7 @@ def main() -> None:
         model, max_slots=3, max_seq=512, policy=args.policy,
         pipeline_depth=3, prefix_cache_entries=16, extra_pages_per_slot=4,
         temperature=args.temperature, top_p=args.top_p,
+        chunk_tokens=args.chunk_tokens,
     )
     rs = np.random.RandomState(0)
     shared_prefix = list(rs.randint(1, 500, 128).astype(int))
@@ -59,6 +66,7 @@ def main() -> None:
     s = eng.stats()
     print(f"engine steps: {s['steps']}  "
           f"dispatches/step: {s['dispatches_per_step']:.1f}  "
+          f"prefill chunks: {s['prefill_chunks']}  "
           f"prefix hits/misses: "
           f"{s['prefix_hits']}/{s['prefix_misses']}  "
           f"pages recycled: {s['pool_freed']}  "

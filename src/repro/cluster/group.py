@@ -47,6 +47,7 @@ class ReplicaGroup:
         pipeline_depth: int = 2,
         prefix_cache_entries: int = 0,
         extra_pages_per_slot: int = 0,
+        chunk_tokens: Optional[int] = None,
         seed: int = 0,
         temperature: float = 0.0,
         top_p: float = 1.0,
@@ -65,6 +66,10 @@ class ReplicaGroup:
         self.policy_name = policy
         self.shards = ShardedPoolSet(n_replicas)
         params = model.init_params(seed)
+        # chunked prefill: None = the engine default (chunked, one
+        # BLOCK_SIZE chunk per fused step); 0 = legacy whole-prompt
+        engine_kw = {} if chunk_tokens is None else {
+            "chunk_tokens": chunk_tokens}
         self.engines: List[ServingEngine] = [
             ServingEngine(
                 model,
@@ -74,6 +79,7 @@ class ReplicaGroup:
                 pipeline_depth=pipeline_depth,
                 prefix_cache_entries=prefix_cache_entries,
                 extra_pages_per_slot=extra_pages_per_slot,
+                **engine_kw,
                 seed=seed,
                 temperature=temperature,
                 top_p=top_p,

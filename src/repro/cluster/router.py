@@ -6,10 +6,14 @@ prompt), so identical request streams route identically — asserted in
 tests/test_cluster.py.
 
   * ``round-robin``     — cyclic, ignores state.  The baseline.
-  * ``least-loaded``    — most free pages in the replica's BlockPool
-    shard wins (ties: shallower scheduler queue, then lowest replica
-    id).  Balances *memory pressure*, which for paged serving is the
-    binding constraint, not request count.
+  * ``least-loaded``    — most *effective* free pages in the replica's
+    BlockPool shard wins (free minus pages already committed to
+    mid-flight chunked prefills and waiting prompts; ties: shallower
+    scheduler queue, then lowest replica id).  Balances *memory
+    pressure*, which for paged serving is the binding constraint, not
+    request count — and a replica mid chunked-prefill reports its TRUE
+    load, not the transient free count before its remaining chunks
+    allocate.
   * ``prefix-affinity`` — the replica whose PrefixCache holds the
     longest cached run of the prompt's leading blocks wins (ties fall
     through to least-loaded).  Keeps hot shared prefixes local to one
@@ -50,11 +54,15 @@ class LeastLoadedRouter(Router):
     name = "least-loaded"
 
     def pick(self, group, prompt: Sequence[int]) -> int:
-        # max free pages; ties -> shallowest queue -> lowest replica id
+        # max EFFECTIVE free pages (free minus the pages the replica is
+        # already committed to: mid-flight chunked prefills allocate
+        # incrementally, so raw free counts over-report capacity while a
+        # long prompt is only partially admitted); ties -> shallowest
+        # queue -> lowest replica id
         return min(
             range(len(group.engines)),
             key=lambda i: (
-                -group.engines[i].pool.free_pages_total(),
+                -group.engines[i].effective_free_pages(),
                 group.engines[i].sched.queue_depth(),
                 i,
             ),

@@ -151,6 +151,12 @@ class BlockPool:
         list — an in-flight step may still read them)."""
         self.policy.retire_pages(slot, pages)
 
+    def free_refs(self, refs: Sequence[tuple]) -> None:
+        """Batch retire across slots ((slot, page) tuples) — one policy
+        bookkeeping event for the whole batch (chunk-batched stamping;
+        see ReclamationPolicy.retire_many)."""
+        self.policy.retire_many(refs)
+
     def reclaim(self) -> None:
         """Best-effort maintenance (drain / teardown), not the hot path."""
         self.policy.reclaim()

@@ -41,6 +41,13 @@ from .stamp_ledger import StampLedger
 PageRef = Tuple[int, int]  # (slot, page)
 
 
+def _group_by_slot(refs: Sequence[PageRef]) -> List[Tuple[int, List[int]]]:
+    by_slot: Dict[int, List[int]] = {}
+    for slot, page in refs:
+        by_slot.setdefault(slot, []).append(page)
+    return list(by_slot.items())
+
+
 class PolicyHold:
     """Handle for a host-actor hold on a policy's stamp domain.
 
@@ -156,6 +163,31 @@ class ReclamationPolicy:
                 return
         self._retire(slot, pages)
 
+    def retire_many(self, refs: Sequence[PageRef]) -> None:
+        """Chunk-batched retire across slots: ONE hold-buffer check (and,
+        for stamp-it, one ledger stamping event) for the whole batch —
+        the serving-layer analogue of ``StampLedger.retire_many``.  Used
+        by batch-shaped retirers (prefix-cache eviction sweeps, cluster
+        migration drops) so per-chunk page churn stays amortized O(1)
+        under the stamp ledger instead of one bookkeeping event per
+        page."""
+        refs = list(refs)
+        if not refs:
+            return
+        with self._hold_lock:
+            if self._open_holds:
+                self._held.extend(_group_by_slot(refs))
+                self._held_pages += len(refs)
+                return
+        self._retire_refs(refs)
+
+    def _retire_refs(self, refs: Sequence[PageRef]) -> None:
+        """Batch retire body; default groups by slot.  Policies with a
+        native batch primitive override (StampItPolicy: one stamped ring
+        append for the whole batch)."""
+        for slot, pages in _group_by_slot(refs):
+            self._retire(slot, pages)
+
     def _retire(self, slot: int, pages: Sequence[int]) -> None:
         raise NotImplementedError
 
@@ -246,6 +278,15 @@ class StampItPolicy(ReclamationPolicy):
         # one ledger lock acquisition for the whole batch
         self.ledger.retire_many(
             [lambda s=slot, p=p: self.release(s, p) for p in pages]
+        )
+        self.ledger.reclaim()
+
+    def _retire_refs(self, refs: Sequence[PageRef]) -> None:
+        # native batch: the whole cross-slot batch is ONE stamped ledger
+        # event (single lock acquisition, single ring append run, single
+        # reclaim probe) — not one per slot group
+        self.ledger.retire_many(
+            [lambda s=s, p=p: self.release(s, p) for s, p in refs]
         )
         self.ledger.reclaim()
 

@@ -119,17 +119,22 @@ class PrefixCache:
 
     def remove(self, keys: Sequence[Tuple]) -> int:
         """Evict specific keys (migration source dropping its copy);
-        pinned entries are skipped.  Pages retire through the policy."""
+        pinned entries are skipped.  Pages retire through the policy as
+        ONE batch (chunk-batched stamping: a single bookkeeping event
+        however many blocks the prefix spans)."""
         removed = 0
+        refs = []
         with self._lock:
             for key in keys:
                 e = self._map.get(key)
                 if e is None or e.pins > 0:
                     continue
                 del self._map[key]
-                self.pool.free(e.slot, [e.page])
+                refs.append((e.slot, e.page))
                 self.evictions += 1
                 removed += 1
+            if refs:
+                self.pool.free_refs(refs)
         return removed
 
     # ------------------------------------------------------------------
@@ -156,9 +161,12 @@ class PrefixCache:
         return False
 
     def drain(self) -> None:
+        refs = []
         with self._lock:
             for key, e in list(self._map.items()):
                 if e.pins == 0:
                     del self._map[key]
-                    self.pool.free(e.slot, [e.page])
+                    refs.append((e.slot, e.page))
                     self.evictions += 1
+            if refs:
+                self.pool.free_refs(refs)  # one retire batch, one stamp

@@ -249,6 +249,50 @@ def attention_decode(
     return out[:, None], new_cache
 
 
+def attention_chunk(
+    p,
+    x: jax.Array,  # (1, C, M) — one prefill chunk for one slot
+    cfg: ModelConfig,
+    cache: Dict[str, jax.Array],  # per-layer slice (no leading L dim)
+    *,
+    slot: jax.Array,       # scalar int32 — the admitting slot
+    row: jax.Array,        # (mb,) int32 — block-table row incl. this chunk
+    pages: jax.Array,      # (nc,) int32 — pages this chunk writes
+    positions: jax.Array,  # (C,) int32 — absolute token positions
+    n_kv: int,             # static bound on the prior-KV page sweep
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill attention against a paged KV cache.
+
+    The chunk's K/V are scattered into the slot's pool pages at the chunk
+    offsets FIRST, then the queries attend causally (``q_offset`` masking)
+    over the first ``n_kv`` pages of the slot's block-table row — which
+    now hold every earlier chunk AND this one.  Padded / unallocated
+    positions sit past the causal horizon, so their (garbage) keys mask to
+    exact zeros: the output at every valid position is bit-identical to a
+    whole-prompt prefill of the same tokens (asserted in
+    tests/test_chunked_prefill.py).
+    """
+    B, C, M = x.shape
+    dt = x.dtype
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    block = cache["k_pool"].shape[2]
+    Hkv, D = cache["k_pool"].shape[3], cache["k_pool"].shape[4]
+    nc = C // block
+    kp = cache["k_pool"].at[slot, pages].set(
+        k[0].reshape(nc, block, Hkv, D).astype(cache["k_pool"].dtype)
+    )
+    vp = cache["v_pool"].at[slot, pages].set(
+        v[0].reshape(nc, block, Hkv, D).astype(cache["v_pool"].dtype)
+    )
+    gk = kp[slot][row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
+    gv = vp[slot][row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
+    out = ops.flash_attention(q, gk, gv, causal=True, q_offset=positions[0])
+    out = jnp.einsum("bshd,hdm->bsm", out, p["wo"].astype(dt))
+    return out, dict(cache, k_pool=kp, v_pool=vp)
+
+
 def q_rolling(q1: jax.Array, cfg: ModelConfig) -> jax.Array:
     """Rolling caches lose absolute slot order; attention over a ring is
     order-invariant under softmax (positions already baked into k via

@@ -134,6 +134,13 @@ class Model:
         return T.forward_prefill(params, batch, self.cfg,
                                  constrain=constrain)
 
+    def prefill_chunk(self, params, cache, batch, *, n_kv=None):
+        """One chunk of an incremental prefill against the paged decode
+        cache (serving hot path; see :func:`repro.models.transformer.
+        prefill_chunk`).  ``n_kv`` (static int) bounds the prior-KV page
+        sweep like :meth:`decode_step`."""
+        return T.prefill_chunk(params, cache, batch, self.cfg, n_kv=n_kv)
+
     def decode_step(self, params, cache, batch, *, n_kv=None):
         """``n_kv`` (static int) bounds the paged-attention KV sweep to the
         first ``n_kv`` block-table columns (serving hot path)."""

@@ -501,6 +501,61 @@ def forward_prefill(params, batch, cfg: ModelConfig, *,
     return logits_last, cache
 
 
+def prefill_chunk(params, cache, batch, cfg: ModelConfig, *,
+                  n_kv: Optional[int] = None):
+    """One chunk of an incremental (chunked) prefill for paged layouts.
+
+    Processes ``C = tokens.shape[1]`` prompt positions starting at absolute
+    position ``start`` for one slot: every layer scatters the chunk's K/V
+    into the slot's pool pages (``pages``, chunk-offset blocks; spare
+    entries point at the scratch page 0) and attends the chunk's queries
+    causally over the slot's paged prior KV + the chunk itself
+    (:func:`repro.models.layers.attention_chunk`).  Numerics are
+    bit-identical to a whole-prompt :func:`forward_prefill` of the same
+    tokens at every valid position — chunking changes the schedule, never
+    the math.
+
+    ``batch``: {"tokens": (1, C) int32, "start": scalar int32,
+                "slot": scalar int32, "row": (mb,) int32 block-table row,
+                "pages": (C // BLOCK_SIZE,) int32,
+                "last_index": scalar int32 — position of the final prompt
+                token WITHIN the chunk (only read on the last chunk)}
+    ``n_kv`` (static) bounds the prior-KV page sweep, exactly as in
+    :func:`decode_step`.  Returns (logits (1, V) at ``last_index``,
+    new_cache).
+    """
+    assert cache_layout(cfg) == "paged", "chunked prefill is paged-only"
+    tokens = batch["tokens"]
+    C = tokens.shape[1]
+    slot, row, pages = batch["slot"], batch["row"], batch["pages"]
+    if n_kv is None:
+        n_kv = row.shape[0]
+    positions = batch["start"] + jnp.arange(C, dtype=jnp.int32)
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+
+    def body(h, xs):
+        lp, cl = xs
+        a_in = L.apply_norm(lp["norm1"], h, cfg)
+        a, new_c = L.attention_chunk(
+            lp["attn"], a_in, cfg, cl, slot=slot, row=row, pages=pages,
+            positions=positions, n_kv=n_kv)
+        h = h + a
+        m_in = L.apply_norm(lp["norm2"], h, cfg)
+        if cfg.family == "moe":
+            m = L.apply_moe(lp["moe"], m_in, cfg)
+        else:
+            m = L.apply_mlp(lp["mlp"], m_in, cfg)
+        return h + m, new_c
+
+    x, new_layers = jax.lax.scan(body, x,
+                                 (params["layers"], cache["layers"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    last = jnp.reshape(batch["last_index"], (1, 1, 1)).astype(jnp.int32)
+    x_last = jnp.take_along_axis(x, last, axis=1)[:, 0]
+    logits = L.unembed(params["embed"], x_last, cfg)
+    return logits, dict(cache, layers=new_layers)
+
+
 # ---------------------------------------------------------------------------
 # Decode steps
 # ---------------------------------------------------------------------------

@@ -66,9 +66,13 @@ def sample_tokens(logits, u, temperature: float, top_p: float):
 class DeviceState:
     """Device-resident serving state with a single fused step transition.
 
-    Host-side events (admission, finish, teacher-forcing) are *staged*
-    into pending buffers and applied INSIDE the next fused dispatch, in
-    order: reset -> admit -> teacher-force -> grow -> decode -> sample.
+    Host-side events (admission, prefill chunks, finish, teacher-forcing)
+    are *staged* into pending buffers and applied INSIDE the next fused
+    dispatch, in order: reset -> prefill-chunk -> admit -> teacher-force
+    -> grow -> decode -> sample.  The chunk lane runs BEFORE the admit
+    lane so a prompt's final chunk can write the first token into
+    ``first_buf`` and the admit staged for the same dispatch can consume
+    it — admission steps stay one dispatch.
     """
 
     def __init__(
@@ -83,6 +87,7 @@ class DeviceState:
         temperature: float = 0.0,
         top_p: float = 1.0,
         seed: int = 0,
+        chunk_tokens: int = 0,
     ) -> None:
         self.model = model
         self.params = params
@@ -92,6 +97,12 @@ class DeviceState:
         self.block = block
         self.temperature = float(temperature)
         self.top_p = float(top_p)
+        # chunked-prefill lane width (0 = lane disabled / legacy prefill).
+        # ONE static shape for the whole engine lifetime: the fused step
+        # compiles a with-chunk variant per n_kv bucket, never a new
+        # entry per prompt length (chunk_shapes observes this).
+        self.chunk_tokens = int(chunk_tokens)
+        self.chunk_shapes: set = set()
 
         B = max_slots
         self.tokens = jnp.zeros((B, 1), jnp.int32)
@@ -105,12 +116,21 @@ class DeviceState:
         # staged host events, applied by the next fused dispatch
         self._pending_resets: List[int] = []
         self._pending_admits: List[Tuple] = []
+        self._pending_chunk: Optional[Tuple] = None
         # shared all-zeros operands for the steady state (no events
         # pending) — device-resident so the common dispatch passes
         # already-committed buffers instead of re-uploading numpy zeros;
         # event paths build fresh numpy arrays (same avals, same compile)
         self._zeros = jnp.zeros((B,), jnp.int32)
         self._zeros_row = jnp.zeros((B, mb), jnp.int32)
+        # chunk-lane dummies (unused by the has_chunk=False variant, but
+        # the jit signature is shared, so the avals must stay fixed)
+        self._zero = jnp.int32(0)
+        self._ck_zeros_toks = jnp.zeros((1, max(self.chunk_tokens, 1)),
+                                        jnp.int32)
+        self._ck_zeros_row = jnp.zeros((mb,), jnp.int32)
+        self._ck_zeros_pages = jnp.zeros(
+            (max(self.chunk_tokens // block, 1),), jnp.int32)
         self.stage_ns = 0  # host time spent building step operands
 
         # dispatch accounting (decode plane vs admission plane).  Any
@@ -122,13 +142,17 @@ class DeviceState:
         self.migration_dispatches = 0  # cluster plane, cold path
 
         # ---- jitted device functions ----
-        # n_kv is static: one compile per power-of-two page-sweep bucket.
+        # n_kv is static: one compile per power-of-two page-sweep bucket
+        # (x2 with the chunked-prefill lane folded in — has_chunk is the
+        # ONLY other static axis; the chunk lane's token shape is fixed at
+        # construction, so prompt length never mints a compile entry).
         # Donated: cache, lengths, table, mask, pages, rng.  NOT donated:
         # tokens (in-flight pipeline entries keep references for their
-        # completion device_get) and first_buf (prefill owns its donation).
+        # completion device_get) and first_buf (returned updated instead —
+        # the chunk lane writes it on a prompt's final chunk).
         self._step = jax.jit(
             self._step_fn, donate_argnums=(1, 3, 4, 5, 6, 8),
-            static_argnums=(20,),
+            static_argnums=(27, 28),
         )
         # fused prefill+KV-load, keyed by bucketed seq length: a classic
         # admission is ONE dispatch (satellite of the PR 2 open item)
@@ -141,7 +165,8 @@ class DeviceState:
     def _step_fn(self, params, cache, tokens, lengths, table, mask, pages,
                  first_buf, rng, reset_m, admit_m, admit_len, admit_row,
                  admit_pages, admit_tok, admit_from_buf, admit_set_tok,
-                 tf_m, tf_vals, cand_pages, n_kv):
+                 tf_m, tf_vals, cand_pages, ck_tokens, ck_slot, ck_start,
+                 ck_row, ck_pages, ck_last, ck_last_index, n_kv, has_chunk):
         B = self.max_slots
         rows = jnp.arange(B, dtype=jnp.int32)
 
@@ -151,6 +176,34 @@ class DeviceState:
         mask = mask * keep
         pages = pages * keep
         table = table * keep[:, None]
+
+        # 1b. chunked-prefill lane (at most ONE chunk per step; static
+        # branch, so decode-only steps compile without it).  The chunk's
+        # KV lands in the admitting slot's pool pages; on the prompt's
+        # final chunk the first token is sampled HERE and dropped into
+        # first_buf, which the admit lane (staged for this same dispatch)
+        # consumes below — prompt-done -> emit-token-1 is a pure
+        # device-side transition, still one dispatch.
+        chunk_first = self._zero
+        if has_chunk:
+            ck_logits, cache = self.model.prefill_chunk(
+                params, cache,
+                {"tokens": ck_tokens, "start": ck_start, "slot": ck_slot,
+                 "row": ck_row, "pages": ck_pages,
+                 "last_index": ck_last_index},
+                n_kv=n_kv,
+            )
+            if self.temperature > 0.0:
+                rng, sub = jax.random.split(rng)
+                u = jax.random.uniform(sub, (1,), jnp.float32)
+                first = sample_tokens(ck_logits, u, self.temperature,
+                                      self.top_p)
+            else:
+                first = jnp.argmax(ck_logits, axis=-1).astype(jnp.int32)
+            chunk_first = first[0]
+            first_buf = jnp.where(ck_last == 1,
+                                  first_buf.at[ck_slot].set(chunk_first),
+                                  first_buf)
 
         # 2. admissions
         lengths = jnp.where(admit_m == 1, admit_len, lengths)
@@ -190,7 +243,7 @@ class DeviceState:
         else:
             new_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return (new_tokens[:, None], cache, lengths + mask, table, mask,
-                pages, rng)
+                pages, first_buf, rng, chunk_first)
 
     # ------------------------------------------------------------------
     # admission-plane bodies (per-request, not per-step)
@@ -252,6 +305,42 @@ class DeviceState:
         self._pending_admits.append(
             (slot, length, row, n_pages, token, token_from_buf, set_token)
         )
+
+    def has_pending_chunk(self) -> bool:
+        """True when a prefill chunk is staged for the next dispatch
+        (the engine must dispatch even with no active decode slots)."""
+        return self._pending_chunk is not None
+
+    def prefill_jit_shapes(self) -> list:
+        """Compiled legacy whole-prompt prefill shapes (pow2 buckets);
+        empty for chunked engines — the compile-cache-collapse
+        observable."""
+        return sorted(self._prefill_cache)
+
+    def fused_step_compiles(self) -> int:
+        """Fused-step jit signature-cache entries (-1 if the runtime has
+        no introspection).  CAVEAT: this over-counts XLA programs — the
+        cache also keys on operand-placement combinations (numpy event
+        operands vs device-resident steady-state zeros), so it bounds
+        but does not equal (n_kv buckets x has_chunk).  It saturates
+        once every step-kind combo has run; it must NOT grow with the
+        number of distinct prompt lengths (the pow2-bucket failure mode
+        this PR removes)."""
+        cache_size = getattr(self._step, "_cache_size", None)
+        return cache_size() if cache_size is not None else -1
+
+    def stage_chunk(self, slot: int, tokens: np.ndarray, start: int,
+                    row: np.ndarray, pages: np.ndarray, is_last: bool,
+                    last_index: int) -> None:
+        """Stage one prefill chunk for the next fused dispatch.  At most
+        one chunk rides per step (the scheduler's interleaving policy);
+        ``tokens`` is always exactly ``chunk_tokens`` wide (the last chunk
+        pads), so the lane holds ONE compiled shape forever."""
+        assert self.chunk_tokens and len(tokens) == self.chunk_tokens
+        assert self._pending_chunk is None, "one chunk per fused step"
+        self.chunk_shapes.add(len(tokens))
+        self._pending_chunk = (slot, tokens, start, row, pages, is_last,
+                               last_index)
 
     # ------------------------------------------------------------------
     # dispatch API
@@ -322,7 +411,9 @@ class DeviceState:
 
     def dispatch(self, tf: Dict[int, int], grow: Dict[int, int],
                  n_kv: int):
-        """Run ONE fused engine step; returns the new token chain.
+        """Run ONE fused engine step; returns ``(tokens, chunk_first)`` —
+        the new token chain plus the chunk lane's first-token scalar
+        (meaningful only when the staged chunk was a prompt's last).
 
         ``tf``   — slot -> teacher-forced token for this step.
         ``grow`` — slot -> candidate page id (consumed iff the device
@@ -369,16 +460,34 @@ class DeviceState:
             cand = np.zeros((B,), np.int32)
             for slot, page in grow.items():
                 cand[slot] = page
+        has_chunk = self._pending_chunk is not None
+        ck_tokens = self._ck_zeros_toks
+        ck_slot = ck_start = ck_last = ck_last_index = self._zero
+        ck_row = self._ck_zeros_row
+        ck_pages = self._ck_zeros_pages
+        if has_chunk:
+            (c_slot, c_toks, c_start, c_row, c_pages, c_is_last,
+             c_last_index) = self._pending_chunk
+            ck_tokens = np.asarray(c_toks, np.int32)[None]
+            ck_slot = np.int32(c_slot)
+            ck_start = np.int32(c_start)
+            ck_row = np.asarray(c_row, np.int32)
+            ck_pages = np.asarray(c_pages, np.int32)
+            ck_last = np.int32(1 if c_is_last else 0)
+            ck_last_index = np.int32(c_last_index)
         self.stage_ns += time.perf_counter_ns() - t0
 
         (self.tokens, self.cache, self.lengths, self.table, self.mask,
-         self.pages, self.rng) = self._step(
+         self.pages, self.first_buf, self.rng, chunk_first) = self._step(
             self.params, self.cache, self.tokens, self.lengths, self.table,
             self.mask, self.pages, self.first_buf, self.rng, reset_m,
             admit_m, admit_len, admit_row, admit_pages, admit_tok,
-            admit_from_buf, admit_set_tok, tf_m, tf_vals, cand, n_kv,
+            admit_from_buf, admit_set_tok, tf_m, tf_vals, cand, ck_tokens,
+            ck_slot, ck_start, ck_row, ck_pages, ck_last, ck_last_index,
+            n_kv, has_chunk,
         )
         self._pending_resets.clear()
         self._pending_admits.clear()
+        self._pending_chunk = None
         self.decode_dispatches += 1
-        return self.tokens
+        return self.tokens, chunk_first

@@ -60,6 +60,7 @@ class ServingEngine:
         pipeline_depth: int = 2,
         prefix_cache_entries: int = 0,
         extra_pages_per_slot: int = 0,
+        chunk_tokens: int = BLOCK_SIZE,
         seed: int = 0,
         temperature: float = 0.0,
         top_p: float = 1.0,
@@ -79,6 +80,17 @@ class ServingEngine:
         self.block = BLOCK_SIZE
         self.mb = -(-max_seq // BLOCK_SIZE) + 1
         self.pipeline_depth = pipeline_depth
+        # chunked prefill (the default): prompts are admitted one fixed
+        # `chunk_tokens` slice per fused step — bounded TTFT, ONE compiled
+        # chunk shape.  0 selects the legacy whole-prompt prefill (its own
+        # dispatch per admission, pow2-bucketed compile cache); kept as
+        # the benchmark/equality baseline.
+        if chunk_tokens < 0 or (chunk_tokens and chunk_tokens % BLOCK_SIZE):
+            raise ValueError(
+                "chunk_tokens must be 0 (legacy whole-prompt prefill) or "
+                f"a positive multiple of BLOCK_SIZE ({BLOCK_SIZE})"
+            )
+        self.chunk_tokens = chunk_tokens
         # cluster plane: which data-parallel replica this engine is; its
         # pool is that replica's shard of the cluster's logical pool
         self.replica_id = replica_id
@@ -108,7 +120,7 @@ class ServingEngine:
         self.dev = DeviceState(
             model, params, cache, max_slots=max_slots, mb=self.mb,
             block=self.block, temperature=temperature, top_p=top_p,
-            seed=sample_seed,
+            seed=sample_seed, chunk_tokens=chunk_tokens,
         )
 
         # page-ref cache: rebuilt only when the active page set changes
@@ -117,9 +129,15 @@ class ServingEngine:
 
         self.steps = 0
         self.decode_steps = 0  # engine steps that dispatched decode work
-        self.admissions = 0  # requests admitted (each = ONE dispatch)
+        self.admissions = 0  # requests admitted
+        self.prefill_chunks = 0  # chunk-lane rides (chunked admissions)
         self.host_ns = 0  # host-side bookkeeping time in _dispatch_decode
         self.backpressure_syncs = 0  # PoolExhausted -> force-sync events
+        self.chunk_backpressure = 0  # ... of which mid chunked prefill
+        # chunk-lane per-step state (consumed by _dispatch_decode)
+        self._chunk_rr = 0  # round-robin pointer over admitting slots
+        self._chunk_need_pages = 0  # staged chunk's KV-sweep page bound
+        self._chunk_finalizing: Optional[Request] = None
 
     # ------------------------------------------------------------------
     # scheduler-plane views (public API continuity)
@@ -151,6 +169,14 @@ class ServingEngine:
                eos_id: Optional[int] = None) -> Request:
         return self.sched.submit(prompt, max_new_tokens, eos_id)
 
+    def effective_free_pages(self) -> int:
+        """Chunk-aware router load signal: free pages minus the pages
+        this engine is already committed to allocating (the unprefilled
+        remainder of mid-flight chunked admissions + waiting prompts) —
+        a replica mid-prefill reports its TRUE load."""
+        return (self.pool.free_pages_total()
+                - self.sched.pending_prefill_pages())
+
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         start = self.steps  # lifetime counter: bound THIS call's work
         while self.sched.has_work():
@@ -164,13 +190,17 @@ class ServingEngine:
         # 1. retire the oldest in-flight step if the pipeline is full
         while self.sched.pipeline_full():
             self._complete_oldest()
-        # 2. admissions
+        # 2. admissions (chunked admissions only OCCUPY a slot here;
+        #    their prompt tokens ride the fused step one chunk at a time)
         while self.sched.waiting and self.sched.free_slots:
             if not self._admit(self.sched.waiting[0]):
                 break
             self.sched.waiting.popleft()
-        # 3. one fused dispatch for the active slots
-        if self.sched.active:
+        # 3. advance at most one prefill chunk (round-robin over the
+        #    admitting slots — the interleaving policy)
+        chunk_staged = bool(self.sched.admitting) and self._advance_chunk()
+        # 4. one fused dispatch for decode work and/or the staged chunk
+        if self.sched.active or chunk_staged:
             self._dispatch_decode()
         elif self.sched.inflight:
             self._complete_oldest()
@@ -241,60 +271,183 @@ class ServingEngine:
         # prefix-cache lookup over full prompt blocks
         keys = prefix_block_keys(prompt, self.block)
         hits = self.prefix_cache.lookup(keys) if keys else []
-        try:
-            pages = self.pool.alloc(slot, n_blocks)
-        except PoolExhausted:
-            self.prefix_cache.unpin(hits)
-            return False
 
         # keep at least the final prompt token out of the "hit" span so a
         # fully-cached prompt still runs one forced step to emit token 1
         n_hit_tokens = min(len(hits) * self.block, len(prompt) - 1)
         suffix = prompt[n_hit_tokens:]
         # replay only pays off for short suffixes; a long one takes the
-        # classic prefill, which rewrites EVERY page — copying the hit
+        # full prefill, which rewrites EVERY page — copying the hit
         # pages first would be wasted work (and a second dispatch)
         use_replay = bool(n_hit_tokens) and len(suffix) <= 2 * self.block
         if use_replay:
+            # short suffix after a cache hit: teacher-force through decode
+            try:
+                pages = self.pool.alloc(slot, n_blocks)
+            except PoolExhausted:
+                self.prefix_cache.unpin(hits)
+                return False
             self.dev.copy_pages(
                 [e.slot for e in hits], [e.page for e in hits],
                 slot, pages[: len(hits)],
             )
-        self.prefix_cache.unpin(hits)
-
-        self._refs_dirty = True
-        req._first_dev = None  # type: ignore[attr-defined]
-
-        if use_replay:
-            # short suffix after a cache hit: teacher-force through decode
+            self.prefix_cache.unpin(hits)
+            self._refs_dirty = True
+            req._first_dev = None  # type: ignore[attr-defined]
             self.sched.bind_slot(req, slot, pages, n_hit_tokens)
             req._tf_suffix = list(suffix)  # type: ignore[attr-defined]
             self.dev.stage_admit(slot, n_hit_tokens,
                                  self.sched.block_table[slot], n_blocks)
-        else:
-            # classic prefill, bucketed to a power-of-two block count so
-            # the compile cache is O(log(max_seq/block)) instead of one
-            # entry per distinct prompt-block count.  Forward pass,
-            # first-token sample AND the KV scatter into this slot's
-            # pages are ONE fused dispatch (admission_dispatches == 1
-            # per admission, asserted in tests/test_engine.py).
-            nb_bucket = _pow2_bucket(n_blocks)
-            S = nb_bucket * self.block
-            pad = S - len(prompt)
-            toks = np.asarray(prompt + [0] * pad, np.int32)[None]
-            first_dev = self.dev.prefill(toks, len(prompt) - 1, slot,
-                                         n_blocks, pages)
-            # token 1 stays on device (in the prefill first-token buffer,
-            # which the fused step reads); the host materializes it at
-            # the first pipeline-lagged completion for this request
-            req._first_dev = first_dev  # type: ignore[attr-defined]
-            self.sched.bind_slot(req, slot, pages, len(prompt))
+            self.admissions += 1
+            return True
+        self.prefix_cache.unpin(hits)
+
+        if self.chunk_tokens:
+            # chunked admission: occupy the slot now; pages are allocated
+            # incrementally and the prompt rides the fused step one chunk
+            # per step (_advance_chunk).  The chunk hold is the paper's
+            # long-lived critical region at admission granularity: pages
+            # retired anywhere in the domain while this prefill is mid-
+            # flight stay unreclaimed until it completes (O(1) for
+            # stamp-it; buffered for hazard/lfrc — the asymmetry the
+            # long-prompt benchmark measures).
+            self.sched.bind_admitting(req, slot)
+            req._chunk_hold = self.pool.hold(  # type: ignore[attr-defined]
+                "chunk-prefill")
+            req._first_dev = None  # type: ignore[attr-defined]
             req._tf_suffix = []  # type: ignore[attr-defined]
-            self.dev.stage_admit(slot, len(prompt),
-                                 self.sched.block_table[slot], n_blocks,
-                                 token_from_buf=True, set_token=True)
+            self.admissions += 1
+            return True
+
+        # legacy whole-prompt prefill, bucketed to a power-of-two block
+        # count so the compile cache is O(log(max_seq/block)) instead of
+        # one entry per distinct prompt-block count.  Forward pass,
+        # first-token sample AND the KV scatter into this slot's pages
+        # are ONE (extra) dispatch per admission.
+        try:
+            pages = self.pool.alloc(slot, n_blocks)
+        except PoolExhausted:
+            return False
+        self._refs_dirty = True
+        nb_bucket = _pow2_bucket(n_blocks)
+        S = nb_bucket * self.block
+        pad = S - len(prompt)
+        toks = np.asarray(prompt + [0] * pad, np.int32)[None]
+        first_dev = self.dev.prefill(toks, len(prompt) - 1, slot,
+                                     n_blocks, pages)
+        # token 1 stays on device (in the prefill first-token buffer,
+        # which the fused step reads); the host materializes it at
+        # the first pipeline-lagged completion for this request
+        req._first_dev = first_dev  # type: ignore[attr-defined]
+        self.sched.bind_slot(req, slot, pages, len(prompt))
+        req._tf_suffix = []  # type: ignore[attr-defined]
+        self.dev.stage_admit(slot, len(prompt),
+                             self.sched.block_table[slot], n_blocks,
+                             token_from_buf=True, set_token=True)
         self.admissions += 1
         return True
+
+    # ------------------------------------------------------------------
+    # chunked prefill (inside the fused step)
+    # ------------------------------------------------------------------
+    def _advance_chunk(self) -> bool:
+        """Stage the next prefill chunk for ONE admitting slot (round-
+        robin interleaving policy); a slot stalled on pool exhaustion
+        yields its turn.  Returns True iff a chunk was staged."""
+        sched = self.sched
+        slots = sorted(sched.admitting)
+        order = ([s for s in slots if s >= self._chunk_rr]
+                 + [s for s in slots if s < self._chunk_rr])
+        for slot in order:
+            if self._stage_chunk(slot, sched.admitting[slot]):
+                self._chunk_rr = slot + 1
+                return True
+        return False
+
+    def _stage_chunk(self, slot: int, req: Request) -> bool:
+        sched = self.sched
+        P = len(req.prompt)
+        C = self.chunk_tokens
+        start = req.chunk_pos
+        end = min(start + C, P)
+        # incremental allocation: exactly the pages this chunk's valid
+        # tokens land in (the padded tail of the last chunk scatters to
+        # the scratch page 0, like every other masked lane)
+        need = min(-(-end // self.block), req.total_pages(self.block))
+        n_new = need - req.n_pages
+        if n_new > 0:
+            pages = self._alloc_chunk_pages(slot, req, n_new)
+            if pages is None:
+                return False  # back-pressure: stall, retry next step
+            sched.add_chunk_pages(slot, pages)
+            self._refs_dirty = True
+        toks = np.zeros((C,), np.int32)
+        toks[: end - start] = req.prompt[start:end]
+        nc = C // self.block
+        fb = start // self.block
+        spages = sched.slot_pages[slot]
+        write_pages = np.asarray(
+            [spages[fb + j] if fb + j < len(spages) else 0
+             for j in range(nc)], np.int32)
+        is_last = end >= P
+        last_index = (P - 1 - start) if is_last else (C - 1)
+        self.dev.stage_chunk(slot, toks, start,
+                             sched.block_table[slot].copy(), write_pages,
+                             is_last, last_index)
+        self._chunk_need_pages = need
+        req.chunk_pos = end
+        self.prefill_chunks += 1
+        if is_last:
+            # prompt fully staged: promote to the decode lane.  The admit
+            # below applies in the SAME dispatch as the final chunk —
+            # the chunk lane runs first and leaves token 1 in first_buf,
+            # so this step already decodes token 2.  One dispatch.
+            sched.promote(slot, P)
+            self.dev.stage_admit(slot, P, sched.block_table[slot],
+                                 req.n_pages, token_from_buf=True,
+                                 set_token=True)
+            self._chunk_finalizing = req
+            hold = getattr(req, "_chunk_hold", None)
+            if hold is not None:
+                hold.release()
+                req._chunk_hold = None  # type: ignore[attr-defined]
+        return True
+
+    def _alloc_chunk_pages(self, slot: int, req: Request,
+                           n: int) -> Optional[List[int]]:
+        """Allocate one chunk's pages, cycling the chunk holds under
+        back-pressure: release them (un-parking every page they pinned),
+        force-sync the pipeline, reclaim, re-open, retry."""
+        try:
+            return self.pool.alloc(slot, n)
+        except PoolExhausted:
+            pass
+        self.backpressure_syncs += 1
+        self.chunk_backpressure += 1
+        self._cycle_chunk_holds()
+        try:
+            return self.pool.alloc(slot, n)
+        except PoolExhausted:
+            return None
+
+    def _cycle_chunk_holds(self) -> None:
+        """Back-pressure valve: release every admitting request's chunk
+        hold (pages retired since each opened un-park into the scheme's
+        own retire path), force-sync the pipeline so no step can still
+        read them, reclaim, and re-open fresh holds.  Safe because a
+        mid-prefill slot's OWN pages are allocated (never retired), so
+        the hold is a domain-wide courtesy pin, not a correctness pin —
+        see docs/serving_hot_path.md."""
+        reqs = [r for r in self.sched.admitting.values()
+                if getattr(r, "_chunk_hold", None) is not None]
+        for r in reqs:
+            r._chunk_hold.release()
+        while self.sched.inflight:
+            self._complete_oldest()
+        self.pool.reclaim()
+        for r in reqs:
+            r._chunk_hold = self.pool.hold(  # type: ignore[attr-defined]
+                "chunk-prefill")
 
     # ------------------------------------------------------------------
     # decode dispatch (ONE fused device call)
@@ -317,12 +470,13 @@ class ServingEngine:
             try:
                 (page,) = self.pool.alloc(slot, 1)
             except PoolExhausted:
-                # back-pressure: force-sync everything, retry once
-                # (device wait — keep it out of the host-ns timer)
+                # back-pressure: force-sync everything — cycling any
+                # open chunk holds first, so their parked retires can
+                # actually reclaim — and retry once (device wait — keep
+                # it out of the host-ns timer)
                 self.backpressure_syncs += 1
                 self.host_ns += time.perf_counter_ns() - t0
-                while sched.inflight:
-                    self._complete_oldest()
+                self._cycle_chunk_holds()
                 t0 = time.perf_counter_ns()
                 if req.done:
                     continue  # force-sync finished this very request
@@ -332,7 +486,7 @@ class ServingEngine:
             grow[slot] = page
             req.n_pages += 1
             self._refs_dirty = True
-        if not sched.active:
+        if not sched.active and not self.dev.has_pending_chunk():
             return  # every active request finished during force-sync
 
         # teacher-forced suffix tokens (prefix-cache admissions) override
@@ -347,13 +501,23 @@ class ServingEngine:
             self._page_refs = sched.page_refs()
             self._refs_dirty = False
 
-        # bucketed bound on the KV sweep: pages any active sequence can
-        # touch this step (power-of-two bucket caps recompiles)
-        n_kv = min(max(_pow2_bucket(sched.max_need_pages()), 1), self.mb)
+        # bucketed bound on the KV sweep: pages any active sequence — or
+        # the staged prefill chunk's gather — can touch this step
+        # (power-of-two bucket caps recompiles)
+        n_need = max(sched.max_need_pages(), self._chunk_need_pages, 1)
+        n_kv = min(max(_pow2_bucket(n_need), 1), self.mb)
         self.host_ns += time.perf_counter_ns() - t0
 
         stamp = self.pool.begin_step(self._page_refs)
-        tokens = self.dev.dispatch(tf, grow, n_kv)
+        tokens, chunk_first = self.dev.dispatch(tf, grow, n_kv)
+        if self._chunk_finalizing is not None:
+            # the final chunk's on-device first-token sample; the host
+            # materializes it at this request's first pipeline-lagged
+            # completion, exactly like the legacy prefill buffer
+            self._chunk_finalizing._first_dev = (  # type: ignore
+                chunk_first)
+            self._chunk_finalizing = None
+        self._chunk_need_pages = 0
         self.decode_steps += 1
         sched.inflight.append(
             (stamp, tokens, dict(sched.active), sched.lengths.copy())
@@ -380,6 +544,8 @@ class ServingEngine:
                 # device_get returns a ready value — no pipeline stall
                 req.generated.append(int(jax.device_get(first_dev)))
                 req._first_dev = None  # type: ignore[attr-defined]
+                if not req.first_token_at:
+                    req.first_token_at = time.time()
             # this step consumed the token at position lengths_snap[slot];
             # its output is a real sample only past the prompt
             pos = int(lengths_snap[slot])
@@ -387,6 +553,8 @@ class ServingEngine:
                 continue  # teacher-forcing internal step
             tok = int(tokens[slot, 0])
             req.generated.append(tok)
+            if not req.first_token_at:
+                req.first_token_at = time.time()
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if len(req.generated) >= req.max_new_tokens or hit_eos:
                 self._finish(slot, req)
@@ -430,6 +598,16 @@ class ServingEngine:
                 self.dev.decode_dispatches / max(self.decode_steps, 1)
             ),
             "admission_dispatches": self.dev.admission_dispatches,
+            # chunked-prefill plane: chunk rides are part of the fused
+            # step (no extra dispatch); the jit shape sets prove the
+            # compile-cache collapse (chunk_shapes == [chunk_tokens];
+            # prefill_jit_shapes == [] unless the legacy path ran)
+            "chunk_tokens": self.chunk_tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "chunk_backpressure": self.chunk_backpressure,
+            "chunk_shapes": sorted(self.dev.chunk_shapes),
+            "prefill_jit_shapes": self.dev.prefill_jit_shapes(),
+            "fused_step_compiles": self.dev.fused_step_compiles(),
             "backpressure_syncs": self.backpressure_syncs,
             "pool_unreclaimed": self.pool.unreclaimed(),
             "pool_freed": self.pool.freed_total,

@@ -32,9 +32,15 @@ class Request:
     replica: int = -1  # which cluster replica is serving this request
     generated: Optional[List[int]] = None
     n_pages: int = 0
+    chunk_pos: int = 0  # prompt tokens prefilled so far (chunked path)
     done: bool = False
     submitted_at: float = 0.0
+    first_token_at: float = 0.0  # host observed token 1 (TTFT numerator)
     finished_at: float = 0.0
+
+    def total_pages(self, block: int) -> int:
+        """Pages this request's full prompt occupies."""
+        return max(-(-len(self.prompt) // block), 1)
 
 
 class Scheduler:
@@ -47,6 +53,10 @@ class Scheduler:
         self.pipeline_depth = pipeline_depth
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
+        # slot -> request mid chunked-prefill: the slot is occupied and
+        # its pages are referenced by chunk steps, but it takes no part
+        # in the decode lane until its final chunk promotes it to active
+        self.admitting: Dict[int, Request] = {}
         self.finished: List[Request] = []
         self.free_slots: List[int] = list(range(max_slots))
         # (stamp, tokens_dev, active snapshot, lengths snapshot)
@@ -70,11 +80,26 @@ class Scheduler:
         return req
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.active or self.inflight)
+        return bool(self.waiting or self.active or self.admitting
+                    or self.inflight)
 
     def queue_depth(self) -> int:
         """Router load signal: requests not yet fully served here."""
-        return len(self.waiting) + len(self.active) + len(self.inflight)
+        return (len(self.waiting) + len(self.active) + len(self.admitting)
+                + len(self.inflight))
+
+    def pending_prefill_pages(self) -> int:
+        """Pages this scheduler is already committed to allocating: the
+        unprefilled remainder of every mid-flight chunked admission plus
+        every waiting prompt.  Chunk-aware routing subtracts this from
+        the pool's free pages so a replica mid-prefill reports its TRUE
+        load, not the transiently-rosy free count."""
+        pending = sum(
+            r.total_pages(self.block) - r.n_pages
+            for r in self.admitting.values()
+        )
+        pending += sum(r.total_pages(self.block) for r in self.waiting)
+        return pending
 
     def pipeline_full(self) -> bool:
         return len(self.inflight) >= self.pipeline_depth
@@ -95,6 +120,40 @@ class Scheduler:
         self.lengths[slot] = length
         self.active[slot] = req
 
+    def bind_admitting(self, req: Request, slot: int) -> None:
+        """Occupy a slot for a chunked admission: no pages yet (they
+        arrive per chunk), no decode-lane mirrors (lengths stay 0 until
+        the final chunk promotes the slot to active)."""
+        assert self.free_slots and self.free_slots[-1] == slot
+        self.free_slots.pop()
+        req.slot = slot
+        req.generated = []
+        req.n_pages = 0
+        req.chunk_pos = 0
+        self.block_table[slot] = 0
+        self.slot_pages[slot] = []
+        self.lengths[slot] = 0
+        self.admitting[slot] = req
+
+    def add_chunk_pages(self, slot: int, pages: List[int]) -> None:
+        """Incremental allocation: append one chunk's pages to the slot's
+        mirrors (the device sees them via the staged chunk row)."""
+        req = self.admitting[slot]
+        row = self.block_table[slot]
+        for p in pages:
+            row[req.n_pages] = p
+            self.slot_pages[slot].append(p)
+            req.n_pages += 1
+
+    def promote(self, slot: int, length: int) -> Request:
+        """Final chunk staged: the slot joins the decode lane at
+        ``length`` (= prompt length), mirroring the admit the device
+        applies inside the same fused dispatch."""
+        req = self.admitting.pop(slot)
+        self.lengths[slot] = length
+        self.active[slot] = req
+        return req
+
     def release_slot(self, slot: int) -> List[int]:
         """Finish bookkeeping: returns the pages the slot held."""
         pages = self.slot_pages[slot]
@@ -111,9 +170,13 @@ class Scheduler:
             self.lengths[slot] += 1
 
     def page_refs(self) -> List[tuple]:
+        """Pages an in-flight step may read: every active slot's pages
+        plus every mid-prefill slot's (chunk steps gather the earlier
+        chunks' pages through the staged block-table row)."""
         return [
             (slot, p)
-            for slot in self.active
+            for slots in (self.active, self.admitting)
+            for slot in slots
             for p in self.slot_pages[slot]
         ]
 

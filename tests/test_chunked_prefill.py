@@ -1,0 +1,275 @@
+"""Chunked prefill inside the fused step: token-for-token equality with
+the unchunked engine, the one-compiled-chunk-shape guarantee, chunk-hold
+reclamation safety and scheduler back-pressure mid-prefill across all
+PAPER_POLICIES, chunk-batched stamping, TTFT bookkeeping, and chunk-aware
+cluster routing."""
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.memory import PAPER_POLICIES, StampItPolicy
+from repro.memory.block_pool import BlockPool
+from repro.models import Model
+from repro.models.transformer import BLOCK_SIZE
+from repro.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(smoke_config(ARCHS["qwen2-0.5b"]))
+
+
+def make_prompt(n, seed):
+    rs = np.random.RandomState(seed)
+    return list(rs.randint(1, 500, n).astype(int))
+
+
+# ---------------------------------------------------------------------------
+# equality + compile-cache shape
+# ---------------------------------------------------------------------------
+def _run_engine(model, prompts, max_new, *, chunk_tokens, max_seq=768,
+                max_slots=2, policy="stamp-it", pipeline_depth=2,
+                extra_pages_per_slot=2):
+    eng = ServingEngine(model, max_slots=max_slots, max_seq=max_seq,
+                        policy=policy, pipeline_depth=pipeline_depth,
+                        chunk_tokens=chunk_tokens,
+                        extra_pages_per_slot=extra_pages_per_slot)
+    for p, mn in zip(prompts, max_new):
+        eng.submit(p, max_new_tokens=mn)
+    done = sorted(eng.run_until_done(), key=lambda r: r.rid)
+    eng.drain()
+    return [r.generated for r in done], eng
+
+
+def test_chunked_matches_unchunked_token_for_token(model):
+    """The tentpole's correctness bar: splitting a prompt into fixed
+    chunks changes the admission SCHEDULE, never the tokens.  Covers
+    sub-chunk, exactly-one-chunk, multi-chunk and non-aligned lengths."""
+    prompts = [make_prompt(n, seed=40 + i)
+               for i, n in enumerate((20, 128, 300, 513, 97))]
+    max_new = [4] * len(prompts)
+    got_c, eng_c = _run_engine(model, prompts, max_new, chunk_tokens=128)
+    got_u, eng_u = _run_engine(model, prompts, max_new, chunk_tokens=0)
+    assert got_c == got_u
+    sc, su = eng_c.stats(), eng_u.stats()
+    # one fused dispatch per step even on the steps that carried chunks
+    assert sc["dispatches_per_step"] == 1
+    assert sc["admission_dispatches"] == 0
+    assert sc["prefill_chunks"] >= sum(-(-len(p) // 128) for p in prompts)
+    # the prefill jit cache collapse: ONE chunk shape vs pow2 buckets
+    assert sc["chunk_shapes"] == [128]
+    assert sc["prefill_jit_shapes"] == []
+    assert len(su["prefill_jit_shapes"]) >= 2  # legacy pow2 buckets
+
+
+def test_multi_block_chunks_match_unchunked(model):
+    """chunk_tokens=256 (nc=2 pages per chunk): the final chunk of a
+    non-aligned prompt — and every chunk of a sub-chunk prompt — pads
+    spare block writes onto the reserved scratch page 0, exactly like
+    the masked decode lane; tokens must still match the unchunked
+    engine (and page 0 must never be allocated to a request)."""
+    prompts = [make_prompt(n, seed=50 + i)
+               for i, n in enumerate((300, 100, 520))]
+    got_c, eng_c = _run_engine(model, prompts, [4] * 3, chunk_tokens=256)
+    got_u, _ = _run_engine(model, prompts, [4] * 3, chunk_tokens=0)
+    assert got_c == got_u
+    assert eng_c.stats()["chunk_shapes"] == [256]
+    # page 0 stays permanently allocated as the scratch sink: it must
+    # never have returned to any slot's free list (a request can only
+    # receive it from there)
+    assert all(0 not in eng_c.pool._free[s]
+               for s in range(eng_c.max_slots))
+
+
+def test_one_chunk_shape_for_all_prompt_lengths(model):
+    """Prompt lengths spanning 1 token to 4+ chunks never mint a second
+    compiled chunk shape, and never a legacy pow2 prefill entry — the
+    acceptance observable for the jit-cache collapse.  (The fused-step
+    signature cache itself also keys on step-event operand combos, so
+    its raw size is a diagnostic, not an assertable shape count — see
+    DeviceState.fused_step_compiles.)"""
+    lengths = (1, 7, 128, 129, 255, 256, 400, 560)
+    prompts = [make_prompt(n, seed=60 + n) for n in lengths]
+    got, eng = _run_engine(model, prompts, [2] * len(prompts),
+                           chunk_tokens=128)
+    assert eng.stats()["chunk_shapes"] == [128]
+    assert eng.stats()["prefill_jit_shapes"] == []
+    assert all(len(g) == 2 for g in got)
+
+
+def test_chunk_tokens_validation(model):
+    with pytest.raises(ValueError):
+        ServingEngine(model, max_slots=1, max_seq=256, chunk_tokens=100)
+
+
+# ---------------------------------------------------------------------------
+# chunk holds + back-pressure across every paper policy
+# ---------------------------------------------------------------------------
+_HOLD_REF = {}
+_BP_REF = {}
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_chunk_hold_blocks_reclaim_mid_prefill(model, policy):
+    """Pages retired while a chunked prefill's hold is open (here: a
+    finished request's pages, retired while another slot is mid
+    chunked-prefill) must NOT be reclaimed until the prefill completes —
+    uniformly across the paper's schemes (native stamp for stamp-it,
+    region parks for the epoch family, buffered retires for hazard/
+    lfrc).  Output must still equal the unchunked engine's."""
+    a_prompt = make_prompt(140, seed=71)   # 2 chunks, finishes fast
+    b_prompt = make_prompt(600, seed=72)   # 5 chunks, long prefill
+    eng = ServingEngine(model, max_slots=2, max_seq=768, policy=policy,
+                        pipeline_depth=2, chunk_tokens=128,
+                        extra_pages_per_slot=2)
+    a = eng.submit(a_prompt, max_new_tokens=2)
+    b = eng.submit(b_prompt, max_new_tokens=3)
+    saw_retired_under_hold = False
+    steps = 0
+    while eng.sched.has_work():
+        freed_before = eng.pool.freed_total
+        eng.step()
+        steps += 1
+        if b.slot in eng.sched.admitting:
+            # no page may reach the free list while b's hold is open
+            assert eng.pool.freed_total == freed_before, policy
+            if a.done and eng.pool.unreclaimed() > 0:
+                saw_retired_under_hold = True
+        assert steps < 10_000
+    eng.drain()
+    for _ in range(3):
+        eng.pool.reclaim()
+    assert saw_retired_under_hold, (
+        "test setup must retire pages while the chunk hold is open")
+    assert eng.pool.freed_total > 0
+    if policy != "epoch":  # native epoch needs 2 more grace periods
+        assert eng.pool.unreclaimed() == 0, eng.stats()
+    key = (tuple(a.generated), tuple(b.generated))
+    ref = _HOLD_REF.setdefault("tokens", key)
+    assert key == ref  # identical across policies
+    if "unchunked" not in _HOLD_REF:
+        got, _ = _run_engine(model, [a_prompt, b_prompt], [2, 3],
+                             chunk_tokens=0, policy="stamp-it")
+        _HOLD_REF["unchunked"] = (tuple(got[0]), tuple(got[1]))
+    assert key == _HOLD_REF["unchunked"]
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_backpressure_between_chunks(model, policy):
+    """Pool exhausted between chunks: the engine must cycle the chunk
+    hold (release -> force-sync -> reclaim -> re-open), finish the
+    prefill, and produce exactly the unchunked engine's tokens."""
+    p1 = make_prompt(300, seed=81)  # 3 pages, finishes first
+    p2 = make_prompt(500, seed=82)  # 4 pages; pool too small for both
+    # pool: mb = 512/128 + 1 + 1 = 6 pages -> 5 usable after scratch
+    eng = ServingEngine(model, max_slots=1, max_seq=512, policy=policy,
+                        pipeline_depth=4, chunk_tokens=128,
+                        extra_pages_per_slot=1)
+    assert eng.pool.pages_per_slot == 6
+    r1 = eng.submit(p1, max_new_tokens=2)
+    r2 = eng.submit(p2, max_new_tokens=3)
+    done = eng.run_until_done()
+    eng.drain()
+    for _ in range(3):
+        eng.pool.reclaim()
+    assert len(done) == 2
+    assert eng.stats()["chunk_backpressure"] >= 1, eng.stats()
+    if policy != "epoch":
+        assert eng.pool.unreclaimed() == 0, eng.stats()
+    key = (tuple(r1.generated), tuple(r2.generated))
+    ref = _BP_REF.setdefault("tokens", key)
+    assert key == ref
+    if "unchunked" not in _BP_REF:
+        eng_u = ServingEngine(model, max_slots=1, max_seq=512,
+                              pipeline_depth=4, chunk_tokens=0,
+                              extra_pages_per_slot=1)
+        u1 = eng_u.submit(p1, max_new_tokens=2)
+        u2 = eng_u.submit(p2, max_new_tokens=3)
+        eng_u.run_until_done()
+        eng_u.drain()
+        _BP_REF["unchunked"] = (tuple(u1.generated), tuple(u2.generated))
+    assert key == _BP_REF["unchunked"]
+
+
+# ---------------------------------------------------------------------------
+# chunk-batched stamping stays amortized O(1)
+# ---------------------------------------------------------------------------
+def test_retire_many_is_one_stamp_event():
+    """A cross-slot retire batch is ONE ledger event: scan cost for
+    retire_many(N) + reclaim is O(N) pops total (amortized O(1) per
+    page), and the batch parks/unparks as a unit under a hold."""
+    pool = BlockPool(4, 8, policy="stamp-it")
+    ledger = pool.ledger
+    for slot in range(4):
+        pool.alloc(slot, 4)
+    refs = [(slot, p) for slot in range(4) for p in range(1, 4)]
+    scans0 = ledger.scan_steps
+    freed0 = pool.freed_total
+    pool.free_refs(refs)  # no active stamps: whole batch frees inline
+    assert pool.freed_total - freed0 == len(refs)
+    assert ledger.retired_total == ledger.reclaimed_total == len(refs)
+    # each page pays O(1): ring pops (one per page) + bounded probes
+    assert ledger.scan_steps - scans0 <= 2 * len(refs) + 4
+    assert pool.unreclaimed() == 0
+
+    # under an open hold the batch parks as a unit...
+    hold = pool.hold("test")
+    pool.free_refs([(0, 1), (1, 1), (2, 1)])
+    assert pool.unreclaimed() == 3
+    hold.release()
+    pool.reclaim()
+    assert pool.unreclaimed() == 0
+
+
+def test_stamp_it_scan_cost_flat_under_chunking(model):
+    """The paper's claim at chunk granularity: multiplying bookkeeping
+    events (one stamp per chunk step) must NOT grow stamp-it's per-step
+    scan cost — scan-steps/step stays O(1) whether a prompt arrives in
+    one piece or five."""
+    prompts = [make_prompt(600, seed=91), make_prompt(560, seed=92)]
+
+    def scans_per_step(chunk_tokens):
+        _, eng = _run_engine(model, prompts, [3, 3],
+                             chunk_tokens=chunk_tokens)
+        s = eng.stats()
+        return (s["pool_scan_steps"] + s["ledger_scan_steps"]) / s["steps"]
+
+    chunked, unchunked = scans_per_step(128), scans_per_step(0)
+    assert chunked < 4.0, chunked  # absolute O(1)-ish bound
+    assert chunked <= max(2.0 * unchunked, 3.0), (chunked, unchunked)
+
+
+# ---------------------------------------------------------------------------
+# TTFT bookkeeping + chunk-aware routing
+# ---------------------------------------------------------------------------
+def test_ttft_recorded(model):
+    prompts = [make_prompt(n, seed=95) for n in (60, 300)]
+    got, eng = _run_engine(model, prompts, [3, 3], chunk_tokens=128)
+    for r in eng.finished:
+        assert r.first_token_at >= r.submitted_at > 0
+        assert r.finished_at >= r.first_token_at
+
+
+def test_least_loaded_router_is_chunk_aware(model):
+    """A replica that accepted a long prompt is committed to its pages
+    even while the chunked prefill has only partially allocated them —
+    the least-loaded router must see that commitment, not the raw free
+    count."""
+    from repro.cluster import ReplicaGroup
+
+    group = ReplicaGroup(model, 2, router="least-loaded", max_slots=2,
+                         max_seq=768, pipeline_depth=2,
+                         extra_pages_per_slot=2, chunk_tokens=128)
+    long_req = group.submit(make_prompt(600, seed=97), max_new_tokens=2)
+    # raw free pages are still symmetric (no chunk has allocated yet),
+    # but replica 0 is committed to 5 pages for the long prompt
+    assert group.engines[0].pool.free_pages_total() == (
+        group.engines[1].pool.free_pages_total())
+    assert group.engines[0].effective_free_pages() < (
+        group.engines[1].effective_free_pages())
+    short_req = group.submit(make_prompt(60, seed=98), max_new_tokens=2)
+    assert group.route_trace == [(0, 0), (1, 1)]
+    group.run_until_done()
+    group.drain()
+    assert long_req.done and short_req.done

@@ -90,14 +90,17 @@ def test_engine_matches_reference(model):
     assert len(done) == 3
     for i in range(3):
         assert got[i] == want[i], f"request {i}: {got[i]} != {want[i]}"
-    # the fused hot path: admission, growth, teacher-forcing, decode and
-    # sampling fold into exactly ONE device dispatch per engine step
+    # the fused hot path: admission chunks, growth, teacher-forcing,
+    # decode and sampling fold into exactly ONE device dispatch per
+    # engine step — even on the steps that carry prefill chunks
     assert eng.stats()["dispatches_per_step"] == 1
-    # ... and the admission plane is fused too: prefill forward pass,
-    # first-token sample AND the KV load into the slot's pages are ONE
-    # dispatch per admitted request (the _load_fn fold)
+    # ... and the admission plane is fully inside the fused step now:
+    # chunked prefill needs ZERO extra dispatches, and the prefill jit
+    # cache holds exactly one chunk shape (no power-of-two buckets)
     assert eng.stats()["admissions"] == 3
-    assert eng.stats()["admission_dispatches"] == eng.stats()["admissions"]
+    assert eng.stats()["admission_dispatches"] == 0
+    assert eng.stats()["chunk_shapes"] == [BLOCK_SIZE]
+    assert eng.stats()["prefill_jit_shapes"] == []
 
 
 @pytest.mark.parametrize("policy", ALL_POLICIES)
@@ -117,7 +120,7 @@ def test_policy_invariance(model, policy):
     ref = _POLICY_REFERENCE.setdefault("tokens", key)
     assert key == ref
     assert eng.stats()["dispatches_per_step"] == 1
-    assert eng.stats()["admission_dispatches"] == eng.stats()["admissions"]
+    assert eng.stats()["admission_dispatches"] == 0  # chunked admissions
     # after drain, every policy but native-epoch fully reclaims (epoch
     # needs two more grace periods by design)
     if policy != "epoch":
@@ -183,8 +186,8 @@ def test_prefix_cache_reuse_slot0(model):
 
 def test_prefix_hit_long_suffix_classic_path(model):
     """A cached-prefix prompt whose suffix is too long for replay takes
-    the classic prefill WITHOUT a wasted hit-page copy: admission stays
-    one dispatch, and the output matches the no-cache reference."""
+    the chunked full prefill WITHOUT a wasted hit-page copy: no extra
+    dispatch, and the output matches the no-cache reference."""
     rs = np.random.RandomState(31)
     prefix = list(rs.randint(1, 500, BLOCK_SIZE).astype(int))
     p1 = prefix + list(rs.randint(1, 500, 5).astype(int))
@@ -199,7 +202,7 @@ def test_prefix_hit_long_suffix_classic_path(model):
     eng.drain()
     assert eng.prefix_cache.hits >= 1  # p2's first block hit the cache
     assert r2.generated == want
-    assert eng.stats()["admission_dispatches"] == eng.stats()["admissions"]
+    assert eng.stats()["admission_dispatches"] == 0  # no replay copy ran
 
 
 def test_sampled_mode_on_device(model):
