@@ -19,6 +19,11 @@ Gates, in order:
      scan-steps/step must stay flat (max/min <= the recorded gate,
      default 2x) from 1 to N replicas while the periodic checkpoint hold
      is active; an absent file/section is a SKIP.
+  5. **fault recovery** — if ``BENCH_fault.json`` exists, every policy's
+     ``steps_to_unblock`` (kill -> surviving replicas' unreclaimed back
+     at the pre-hold baseline) must be present and within the recorded
+     gate (heartbeat timeout + slack), and forced hold expiry must have
+     actually fired; an absent file/section is a SKIP.
 
 ``BENCH_serving.json`` may be the PR 2 era bare list (treated as the
 ``policies`` section) or the current ``{"policies", "sweep"}`` dict.
@@ -41,6 +46,11 @@ import os
 import sys
 
 from .cluster_bench import BENCH_CLUSTER_JSON, FLATNESS_GATE
+from .fault_bench import (
+    BENCH_FAULT_JSON,
+    DEFAULT_HEARTBEAT_TIMEOUT,
+    UNBLOCK_SLACK_STEPS,
+)
 from .serving_bench import BENCH_JSON, run
 
 
@@ -158,6 +168,38 @@ def _check_cluster() -> int:
     return 0
 
 
+def _check_fault() -> int:
+    if not BENCH_FAULT_JSON.exists():
+        print("SKIP: no BENCH_fault.json (run "
+              "`python -m benchmarks.fault_bench` to add the fault-"
+              "recovery baseline)")
+        return 0
+    data = json.loads(BENCH_FAULT_JSON.read_text())
+    rows = data.get("fault")
+    if not rows:
+        print("SKIP: BENCH_fault.json has no 'fault' section")
+        return 0
+    gate = int(data.get("unblock_gate_steps",
+                        DEFAULT_HEARTBEAT_TIMEOUT + UNBLOCK_SLACK_STEPS))
+    bad = []
+    for r in rows:
+        ttu = r.get("steps_to_unblock")
+        if ttu is None or ttu > gate:
+            bad.append((r.get("policy"), ttu))
+        elif not r.get("holds_force_expired"):
+            bad.append((r.get("policy"), "no forced expiry"))
+    shown = {r["policy"]: r.get("steps_to_unblock") for r in rows}
+    print(f"time-to-reclaim-unblock after replica kill (cluster steps, "
+          f"gate <= {gate}): {shown}")
+    if bad:
+        print(f"FAIL: fault recovery unbounded or missing for {bad} — "
+              f"a dead replica's holds must force-expire and unblock "
+              f"reclamation within the gate")
+        return 1
+    print(f"OK: all {len(rows)} policies unblock within the gate")
+    return 0
+
+
 def main() -> int:
     if not BENCH_JSON.exists():
         print(f"FAIL: no baseline at {BENCH_JSON}; run "
@@ -173,7 +215,10 @@ def main() -> int:
     rc = _check_long_prompt(baseline)
     if rc:
         return rc
-    return _check_cluster()
+    rc = _check_cluster()
+    if rc:
+        return rc
+    return _check_fault()
 
 
 if __name__ == "__main__":

@@ -281,6 +281,40 @@ def cluster_table():
     return "\n".join(lines)
 
 
+def fault_table():
+    """Lifecycle plane: kill one replica mid-traffic while its
+    checkpoint writer holds a cross-replica hold.  Time-to-unblock is
+    the cluster-scale analogue of the paper's forced-stamp-expiry
+    mitigation for the stalled-thread weakness."""
+    f = Path(__file__).parent.parent / "BENCH_fault.json"
+    if not f.exists():
+        return "(no BENCH_fault.json — run benchmarks/fault_bench.py)"
+    data = json.loads(f.read_text())
+    rows = data.get("fault") or []
+    if not rows:
+        return "(BENCH_fault.json has no fault rows)"
+    lines = [
+        "| policy | replicas | detect steps | unblock steps | "
+        "blocked steps | replayed | goodput before / during / after "
+        "(tok/step) | dip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["policy"], x["replicas"])):
+        lines.append(
+            f"| {r['policy']} | {r['replicas']} | "
+            f"{r['steps_to_detect']} | {r['steps_to_unblock']} | "
+            f"{r['reclamation_blocked_steps']} | "
+            f"{r['replays_finished']}/{r['replays_submitted']} | "
+            f"{r['goodput_before']} / {r['goodput_during_blocked']} / "
+            f"{r['goodput_after']} | {r['goodput_dip_pct']}% |")
+    lines.append(
+        f"\nGate: every policy unblocks within "
+        f"{data.get('unblock_gate_steps', '?')} cluster steps of the "
+        f"kill (heartbeat timeout + slack), enforced by "
+        f"check_serving_regression.py.")
+    return "\n".join(lines)
+
+
 def _section(title, fn):
     """Render one report section; missing results JSONs degrade to a
     note instead of aborting the whole report."""
@@ -304,6 +338,8 @@ def main():
              long_prompt_table)
     _section("Cluster plane: replica scaling under checkpoint holds",
              cluster_table)
+    _section("Lifecycle plane: replica kill, forced expiry, replay",
+             fault_table)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,18 @@
 """Multi-replica serving cluster, end to end: N data-parallel engines
 (each its own BlockPool shard + reclamation stamp domain), a pluggable
 request router, a periodic checkpoint writer taking **cross-replica
-holds**, and a mid-run prefix-cache migration between replicas.
+holds**, a mid-run prefix-cache migration between replicas, and — with
+``--kill-replica`` — the lifecycle plane's shared-fate story: replica 0
+crashes mid-traffic with a checkpoint hold open, the LifecycleManager
+detects the silence by missed heartbeats, force-expires its holds
+(unblocking reclamation cluster-wide) and replays its in-flight
+requests on the survivors.
 
     PYTHONPATH=src python examples/serve_cluster.py \
         --replicas 2 --policy stamp-it --router prefix-affinity
+
+    PYTHONPATH=src python examples/serve_cluster.py \
+        --replicas 2 --kill-replica
 """
 
 import argparse
@@ -13,7 +21,9 @@ from collections import deque
 
 import numpy as np
 
-from repro.cluster import ROUTERS, ReplicaGroup, migrate_prefix, prefix_keys
+from repro.cluster import (
+    ROUTERS, LifecycleManager, ReplicaGroup, migrate_prefix, prefix_keys,
+)
 from repro.memory import POLICIES
 from repro.models import Model
 from repro.configs import ARCHS, smoke_config
@@ -37,8 +47,20 @@ def main() -> None:
                          "the least-loaded router counts a replica's "
                          "unprefilled remainder as load); 0 = legacy "
                          "whole-prompt prefill dispatch")
+    ap.add_argument("--kill-replica", action="store_true",
+                    help="lifecycle demo: crash replica 0 mid-traffic "
+                         "while its checkpoint writer holds a cluster "
+                         "hold; heartbeat death detection, forced hold "
+                         "expiry and request replay take over")
+    ap.add_argument("--kill-step", type=int, default=8)
+    ap.add_argument("--heartbeat-timeout", type=int, default=3,
+                    help="missed cluster steps before a silent replica "
+                         "is declared dead")
     ap.add_argument("--no-migration", action="store_true")
     args = ap.parse_args()
+    if args.kill_replica and args.replicas < 2:
+        ap.error("--kill-replica needs --replicas >= 2 "
+                 "(survivors run the replay)")
 
     model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
     group = ReplicaGroup(
@@ -47,6 +69,8 @@ def main() -> None:
         prefix_cache_entries=16, extra_pages_per_slot=4,
         chunk_tokens=args.chunk_tokens,
     )
+    lifecycle = LifecycleManager(
+        group, heartbeat_timeout=args.heartbeat_timeout)
 
     from repro.models.transformer import BLOCK_SIZE
 
@@ -64,26 +88,43 @@ def main() -> None:
 
     # continuous traffic (one submission per cluster step, so the
     # prefix-affinity router sees caches as they fill) + a periodic
-    # checkpoint writer taking cross-replica holds
+    # checkpoint writer on replica 0 taking cross-replica holds —
+    # group.checkpoint() scopes its cluster hold with `with`, so an
+    # exception mid-snapshot cannot leak a cluster-wide pin
     t0 = time.perf_counter()
     pending = deque(prompts)
+    killed = False
     while pending or group.has_work():
         if pending:
             group.submit(pending.popleft(), max_new_tokens=args.max_new)
-        if group.steps and group.steps % args.checkpoint_every == 0:
-            group.checkpoint()
+        if (group.steps and group.steps % args.checkpoint_every == 0
+                and not killed):
+            live = group.live_ids()
+            group.checkpoint(owner=0 if 0 in live else live[0])
+        if (args.kill_replica and not killed
+                and group.steps >= args.kill_step):
+            # the writer crashes MID-WRITE: its cluster hold is open and
+            # nothing will ever release it cooperatively — the exact
+            # scenario forced expiry exists for
+            group.hold("checkpoint", owner=0)
+            group.kill_replica(0)
+            killed = True
+            print(f"[step {group.steps}] replica 0 killed "
+                  f"(checkpoint hold open, requests in flight)")
         group.step()
     dt = time.perf_counter() - t0
 
     # migrate the shared prefix to the other replica, then replay: the
     # prefix-affinity router must follow the moved pages
     migrated = {}
-    if not args.no_migration and args.replicas > 1:
-        keys = prefix_keys(shared_prefix, group.engines[0].block)
-        match = [e.prefix_cache.match_len(keys) for e in group.engines]
-        src = max(range(args.replicas), key=lambda i: match[i])
+    live = group.live_ids()
+    if not args.no_migration and len(live) > 1:
+        keys = prefix_keys(shared_prefix, group.engines[live[0]].block)
+        match = {i: group.engines[i].prefix_cache.match_len(keys)
+                 for i in live}
+        src = max(live, key=lambda i: match[i])
         if match[src]:
-            dst = max((i for i in range(args.replicas) if i != src),
+            dst = max((i for i in live if i != src),
                       key=lambda i: group.engines[i].pool.free_pages_total())
             migrated = migrate_prefix(group, shared_prefix, src, dst)
             replay = group.submit(list(shared_prefix),
@@ -95,8 +136,9 @@ def main() -> None:
 
     s = group.stats()
     toks = sum(len(r.generated) for r in group.requests if r.done)
-    print(f"replicas={s['replicas']}  policy={s['policy']}  "
-          f"router={s['router']}  requests={s['finished']}  "
+    print(f"replicas={s['replicas']} (live {s['live_replicas']})  "
+          f"policy={s['policy']}  router={s['router']}  "
+          f"requests={sum(r.done for r in group.requests)}  "
           f"generated={toks} tokens in {dt:.2f}s")
     print(f"cluster steps: {s['cluster_steps']}  engine steps: "
           f"{s['engine_steps']}  scan-steps/step: "
@@ -104,6 +146,15 @@ def main() -> None:
     print(f"checkpoints: {s['checkpoints']}  holds issued: "
           f"{s['holds_issued']}  unreclaimed after drain: "
           f"{s['unreclaimed']}")
+    if killed:
+        ls = lifecycle.stats()
+        print(f"lifecycle: dead={ls['dead']} (deadline at tick "
+              f"{ls['deaths'][0][0]})  holds force-expired: "
+              f"{ls['holds_force_expired']}  blocked steps: "
+              f"{ls['reclamation_blocked_steps']}  replays: "
+              f"{ls['replays_finished']}/{ls['replays_submitted']}")
+        assert ls["dead"] == [0] and ls["holds_force_expired"] >= 1
+        assert all(r.done for r in group.requests), "replay must finish"
     if migrated:
         print(f"migration: {migrated}")
     per_route = {}

@@ -3,16 +3,23 @@
 See docs/cluster_serving.md.  Composition:
 
   * :class:`ReplicaGroup`  — N ServingEngine replicas, sharded BlockPool,
-    shared params, one router (group.py);
+    shared params, one router, dynamic membership (group.py);
   * :class:`ClusterLedger` / :class:`ClusterHold` — cross-replica holds
-    entering every replica's stamp domain (ledger.py);
-  * routers — round-robin / least-loaded / prefix-affinity (router.py);
+    entering every replica's stamp domain, with owner attribution and
+    forced expiry (ledger.py);
+  * :class:`LifecycleManager` — heartbeats, shared-fate hold expiry for
+    dead replicas, request replay (lifecycle.py);
+  * :class:`RequestJournal` — the per-replica replay log (journal.py);
+  * routers — round-robin / least-loaded / prefix-affinity over the
+    live replicas (router.py);
   * :func:`migrate_prefix` — hold-protected prefix-cache migration
     (migration.py).
 """
 
 from .group import ReplicaGroup
+from .journal import JournalEntry, RequestJournal
 from .ledger import ClusterHold, ClusterLedger
+from .lifecycle import LifecycleManager
 from .migration import migrate_prefix, prefix_keys
 from .router import (
     ROUTERS,
@@ -24,7 +31,8 @@ from .router import (
 )
 
 __all__ = [
-    "ReplicaGroup", "ClusterLedger", "ClusterHold", "Router",
+    "ReplicaGroup", "ClusterLedger", "ClusterHold", "LifecycleManager",
+    "RequestJournal", "JournalEntry", "Router",
     "RoundRobinRouter", "LeastLoadedRouter", "PrefixAffinityRouter",
     "ROUTERS", "make_router", "migrate_prefix", "prefix_keys",
 ]

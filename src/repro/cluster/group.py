@@ -7,14 +7,27 @@ and its own reclamation **stamp domain** — a replica is to the cluster
 what a thread is to the paper's process.  The group composes:
 
   * a :class:`~repro.cluster.router.Router` that admits requests
-    (round-robin / least-loaded-by-free-pages / prefix-affinity);
+    (round-robin / least-loaded-by-free-pages / prefix-affinity) over
+    the LIVE replicas;
   * a :class:`~repro.cluster.ledger.ClusterLedger` issuing cross-replica
     holds for actors that span shards (checkpoint writer, prefix
     migration);
+  * a per-replica :class:`~repro.cluster.journal.RequestJournal` (the
+    replay log the lifecycle plane re-admits a dead replica's requests
+    from);
   * aggregate observability: cluster scan-steps/step is the number the
     replica-scaling benchmark (benchmarks/cluster_bench.py) tracks —
     stamp-it stays flat as replicas grow because every domain is local
     and a cluster hold costs O(1) per replica.
+
+Membership is dynamic (the lifecycle plane, docs/cluster_serving.md):
+``kill_replica`` injects a crash (the replica goes silent; the attached
+:class:`~repro.cluster.lifecycle.LifecycleManager` detects it by missed
+heartbeats), ``drain_replica`` cooperatively retires a live replica
+(admissions pause, its prefix cache migrates out, its shard retires),
+and ``add_replica`` grows a RUNNING group.  Replica ids are stable:
+engines are never renumbered, husks stay in ``engines`` with
+``crashed``/``retired`` flags and the router only ever picks live ids.
 
 Params are shared: all replicas serve the same model, so ONE param tree
 is built and passed to every engine (device arrays for KV state stay
@@ -30,6 +43,7 @@ import jax
 from ..memory.block_pool import ShardedPoolSet
 from ..serving.engine import ServingEngine
 from ..serving.scheduler import Request
+from .journal import RequestJournal
 from .ledger import ClusterHold, ClusterLedger
 from .router import Router, make_router
 
@@ -65,31 +79,26 @@ class ReplicaGroup:
         self.model = model
         self.policy_name = policy
         self.shards = ShardedPoolSet(n_replicas)
-        params = model.init_params(seed)
+        self._params = model.init_params(seed)
+        self._sample_seed = sample_seed
+        # engine kwargs, kept so add_replica() builds IDENTICAL replicas
+        self._engine_kw: Dict[str, Any] = dict(
+            max_slots=max_slots,
+            max_seq=max_seq,
+            policy=policy,
+            pipeline_depth=pipeline_depth,
+            prefix_cache_entries=prefix_cache_entries,
+            extra_pages_per_slot=extra_pages_per_slot,
+            seed=seed,
+            temperature=temperature,
+            top_p=top_p,
+        )
         # chunked prefill: None = the engine default (chunked, one
         # BLOCK_SIZE chunk per fused step); 0 = legacy whole-prompt
-        engine_kw = {} if chunk_tokens is None else {
-            "chunk_tokens": chunk_tokens}
+        if chunk_tokens is not None:
+            self._engine_kw["chunk_tokens"] = chunk_tokens
         self.engines: List[ServingEngine] = [
-            ServingEngine(
-                model,
-                max_slots=max_slots,
-                max_seq=max_seq,
-                policy=policy,
-                pipeline_depth=pipeline_depth,
-                prefix_cache_entries=prefix_cache_entries,
-                extra_pages_per_slot=extra_pages_per_slot,
-                **engine_kw,
-                seed=seed,
-                temperature=temperature,
-                top_p=top_p,
-                # decorrelate sampled streams across replicas
-                sample_seed=sample_seed + i,
-                replica_id=i,
-                params=params,
-                shard_set=self.shards,
-            )
-            for i in range(n_replicas)
+            self._make_engine(i) for i in range(n_replicas)
         ]
         self.ledger = ClusterLedger(
             [e.pool.policy for e in self.engines]
@@ -98,12 +107,33 @@ class ReplicaGroup:
         self.requests: List[Request] = []
         #: routing decisions in submit order: [(rid-in-cluster, replica)]
         self.route_trace: List[tuple] = []
+        #: lifecycle plane, attached by LifecycleManager(group, ...)
+        self.lifecycle = None
         self.steps = 0
         self.checkpoints = 0
+        self.replicas_added = 0
+        self.replicas_drained = 0
+
+    def _make_engine(self, i: int) -> ServingEngine:
+        return ServingEngine(
+            self.model,
+            **self._engine_kw,
+            # decorrelate sampled streams across replicas
+            sample_seed=self._sample_seed + i,
+            replica_id=i,
+            params=self._params,
+            shard_set=self.shards,
+            journal=RequestJournal(i),
+        )
 
     @property
     def n_replicas(self) -> int:
         return len(self.engines)
+
+    def live_ids(self) -> List[int]:
+        """Replicas the router may target and the step loop runs."""
+        return [i for i, e in enumerate(self.engines)
+                if not (e.crashed or e.retired)]
 
     # ------------------------------------------------------------------
     # request plane
@@ -116,50 +146,193 @@ class ReplicaGroup:
         self.requests.append(req)
         return req
 
+    def submit_replay(self, prompt: Sequence[int], max_new_tokens: int,
+                      eos_id: Optional[int] = None) -> Request:
+        """Lifecycle-internal admission: routed and journaled like any
+        submit, but NOT listed in ``requests``/``route_trace`` — the
+        replay's tokens surface on the ORIGINAL request when the
+        lifecycle plane stitches, so request- and token-accounting over
+        ``group.requests`` counts every served token exactly once."""
+        r = self.router.pick(self, prompt)
+        return self.engines[r].submit(prompt, max_new_tokens, eos_id)
+
     def has_work(self) -> bool:
-        return any(e.sched.has_work() for e in self.engines)
+        if any(self.engines[i].sched.has_work() for i in self.live_ids()):
+            return True
+        # the lifecycle plane may still owe progress (a silent replica
+        # inside its heartbeat-timeout window, unfinished replays)
+        return self.lifecycle is not None and self.lifecycle.pending()
 
     def step(self) -> None:
-        """One cluster step: every replica with work advances one engine
-        step (data-parallel replicas run independent dispatch loops)."""
+        """One cluster step: every live replica with work advances one
+        engine step (data-parallel replicas run independent dispatch
+        loops) and publishes its heartbeat; the lifecycle manager then
+        ticks (deadline checks, death handling, replay stitching)."""
         self.steps += 1
-        for eng in self.engines:
+        for i in self.live_ids():
+            eng = self.engines[i]
             if eng.sched.has_work():
                 eng.step()
+            if self.lifecycle is not None:
+                # publication IS the liveness signal: only a replica
+                # that is actually running reaches this line — a killed
+                # one is skipped by live_ids (crash = silence, exactly
+                # what the manager's deadline detects)
+                self.lifecycle.beat(i, eng.steps)
+        if self.lifecycle is not None:
+            self.lifecycle.tick()
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         start = self.steps  # lifetime counter: bound THIS call's work
-        while self.has_work():
+        grace = 0
+        while True:
+            while self.has_work():
+                self.step()
+                grace = 0
+                if self.steps - start > max_steps:  # pragma: no cover
+                    raise RuntimeError("cluster did not converge")
+            # heartbeat grace window: a replica that crashed while IDLE
+            # is invisible to has_work() until the clock advances.  If
+            # any watched replica still owns an open hold, tick up to
+            # timeout+1 extra steps — a crashed owner goes stale and is
+            # declared dead (expiry may enqueue replays, resuming the
+            # main loop); a live owner beats every tick and simply
+            # keeps its hold, so the window is bounded.
+            if (self.lifecycle is None
+                    or grace > self.lifecycle.timeout
+                    or not self.lifecycle.suspect_holds()):
+                break
             self.step()
+            grace += 1
             if self.steps - start > max_steps:  # pragma: no cover
                 raise RuntimeError("cluster did not converge")
         return [r for r in self.requests if r.done]
 
     def drain(self) -> None:
-        for eng in self.engines:
-            eng.drain()
+        """Teardown: release any still-open cluster holds FIRST — a live
+        hold would park retired pages forever and leave ``unreclaimed >
+        0`` after the engines drain — then drain every live engine."""
+        self.ledger.release_all()
+        for i in self.live_ids():
+            self.engines[i].drain()
+        self.reclaim()
 
     def reclaim(self) -> None:
-        """Best-effort maintenance across all shards (a few rounds, so
-        grace-period policies like native-epoch fully advance)."""
+        """Best-effort maintenance across all live shards (a few rounds,
+        so grace-period policies like native-epoch fully advance)."""
         for _ in range(3):
-            for eng in self.engines:
-                eng.pool.reclaim()
+            for i in self.live_ids():
+                self.engines[i].pool.reclaim()
+
+    # ------------------------------------------------------------------
+    # lifecycle plane: fault injection, live drain, live scale-up
+    # ------------------------------------------------------------------
+    def kill_replica(self, i: int) -> None:
+        """Fault injection: the replica stops stepping AND stops
+        publishing heartbeats, mid-whatever-it-was-doing — in-flight
+        requests, open holds and journal state are left exactly as they
+        were.  Detection and recovery are entirely the attached
+        LifecycleManager's job (missed-deadline path)."""
+        eng = self.engines[i]
+        if eng.retired:
+            raise ValueError(f"replica {i} is already retired")
+        eng.crashed = True
+
+    def drain_replica(self, i: int, *, max_steps: int = 10_000) -> Dict[str, int]:
+        """Cooperatively retire a LIVE replica from a running group:
+        admissions pause (waiting requests re-route to survivors), its
+        admitted requests run to completion, its prefix cache migrates
+        out under a cluster hold via the standard export/import/evict
+        primitives, its stamp domain force-expires and its shard retires
+        from the aggregates.  The router re-targets atomically: live_ids
+        stops listing the replica the moment it is marked retired."""
+        eng = self.engines[i]
+        if eng.crashed or eng.retired:
+            raise ValueError(f"replica {i} is not live")
+        survivors = [j for j in self.live_ids() if j != i]
+        if not survivors:
+            raise ValueError("cannot drain the last live replica")
+        eng.pause_admissions()
+        # 1. hand the not-yet-admitted queue back to the router
+        requeued = eng.sched.take_waiting()
+        # 2. finish what it already admitted (no new admissions)
+        n = 0
+        while (eng.sched.active or eng.sched.admitting
+               or eng.sched.inflight):
+            eng.step()
+            n += 1
+            if n > max_steps:  # pragma: no cover
+                raise RuntimeError("drain did not converge")
+        # 3. migrate its prefix cache out — the standard hold-protected
+        #    export/import/evict sequence, on the cache's full key dump
+        from .migration import migrate_prefix
+
+        dst = max(survivors,
+                  key=lambda j: (self.engines[j].pool.free_pages_total(),
+                                 -j))
+        keys = eng.prefix_cache.keys()
+        migrated = 0
+        if keys:
+            migrated = migrate_prefix(
+                self, None, i, dst, keys=keys, tag="drain-migration",
+            )["imported"]
+        # 4. retire: domain out of the ledger, shard out of the
+        #    aggregates, whatever is still pinned force-expires
+        eng.drain()
+        self.ledger.remove_domain(eng.pool.policy)
+        eng.force_quiesce()
+        eng.retired = True
+        self.shards.retire_shard(i)
+        eng.free_device_state()  # the husk must not pin HBM
+        if self.lifecycle is not None:
+            self.lifecycle.unwatch(i)
+        self.replicas_drained += 1
+        # 5. re-route the requeued requests (identity preserved: the
+        #    caller's Request handles adopt a survivor's scheduler).
+        #    Lifecycle replays are routed but untracked (not in
+        #    `requests`), so only tracked requests land in the trace.
+        for req in requeued:
+            r = self.router.pick(self, req.prompt)
+            self.engines[r].adopt(req)
+            if req in self.requests:
+                self.route_trace.append((self.requests.index(req), r))
+        return {"replica": i, "requeued": len(requeued),
+                "prefix_blocks_migrated": migrated, "migrated_to": dst,
+                "drain_steps": n}
+
+    def add_replica(self) -> int:
+        """Grow a RUNNING group by one replica: fresh shard, fresh stamp
+        domain, same shared params.  Returns the new replica id.  The
+        router targets it from the next pick; open cluster holds do not
+        cover it (they never needed to — see ClusterLedger.add_domain)."""
+        i = self.shards.grow()
+        assert i == len(self.engines), "replica ids must stay dense"
+        eng = self._make_engine(i)
+        self.engines.append(eng)
+        self.ledger.add_domain(eng.pool.policy)
+        if self.lifecycle is not None:
+            self.lifecycle.watch(i)
+        self.replicas_added += 1
+        return i
 
     # ------------------------------------------------------------------
     # cross-replica actors
     # ------------------------------------------------------------------
-    def hold(self, tag: str = "cluster-hold") -> ClusterHold:
-        """Enter every replica's stamp domain (see ClusterLedger)."""
-        return self.ledger.hold(tag)
+    def hold(self, tag: str = "cluster-hold",
+             owner: Optional[int] = None) -> ClusterHold:
+        """Enter every replica's stamp domain (see ClusterLedger).
+        ``owner`` names the replica the holding actor runs on — the
+        lifecycle plane revokes a dead owner's holds."""
+        return self.ledger.hold(tag, owner)
 
-    def checkpoint(self) -> int:
+    def checkpoint(self, owner: Optional[int] = None) -> int:
         """Checkpoint writer: snapshot the shared params under a
         cluster-wide hold (the paper's long-lived critical region — the
         writer must see a frozen page set on every replica while it
         reads).  Returns the number of leaves snapshotted."""
-        with self.ledger.hold("checkpoint"):
-            leaves = jax.tree_util.tree_leaves(self.engines[0].dev.params)
+        with self.ledger.hold("checkpoint", owner):
+            src = self.engines[self.live_ids()[0]]
+            leaves = jax.tree_util.tree_leaves(src.dev.params)
             # the device_get is the "write to stable storage" stand-in
             n = sum(1 for _ in map(jax.device_get, leaves))
         self.checkpoints += 1
@@ -169,13 +342,20 @@ class ReplicaGroup:
     # observability
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
+        live = self.live_ids()
         per = [e.stats() for e in self.engines]
         engine_steps = sum(s["steps"] for s in per)
         scans = sum(
             s["pool_scan_steps"] + s["ledger_scan_steps"] for s in per
         )
-        return {
+        out = {
             "replicas": self.n_replicas,
+            "live_replicas": len(live),
+            "crashed_replicas": sorted(
+                i for i, e in enumerate(self.engines)
+                if e.crashed and not e.retired),
+            "retired_replicas": sorted(
+                i for i, e in enumerate(self.engines) if e.retired),
             "policy": self.policy_name,
             "router": self.router.name,
             "cluster_steps": self.steps,
@@ -188,6 +368,12 @@ class ReplicaGroup:
             "pages_total": self.shards.pages_total(),
             "holds_issued": self.ledger.holds_issued,
             "open_holds": self.ledger.open_holds,
+            "holds_force_expired": self.ledger.force_expired,
             "checkpoints": self.checkpoints,
+            "replicas_added": self.replicas_added,
+            "replicas_drained": self.replicas_drained,
             "per_replica": per,
         }
+        if self.lifecycle is not None:
+            out["lifecycle"] = self.lifecycle.stats()
+        return out

@@ -1,0 +1,101 @@
+"""Request journal: the replay log behind shared-fate fault tolerance.
+
+A replica's in-flight requests die with it — unless enough is recorded
+*outside* the replica to re-admit them elsewhere.  The journal is that
+record: one entry per OPEN request holding the prompt, the sampling
+parameters it was admitted under, and every token the host has observed
+(appended at pipeline-lagged completion, i.e. only tokens that actually
+reached the client); finished entries prune, so the journal stays
+O(in-flight requests).  It deliberately records nothing device-resident:
+KV pages, in-flight samples and the first-token buffer are all lost on a
+crash, exactly as they would be on a real machine.
+
+Replay semantics (:mod:`repro.cluster.lifecycle`):
+
+  * **greedy** requests (temperature 0) resume *token-for-token*: the
+    survivor is given ``prompt + emitted`` as its prompt — the already-
+    served tokens are teacher-forced, never re-sampled — and generates
+    only the remaining budget.  Greedy decoding is a deterministic
+    function of (params, token prefix), so the stitched stream
+    ``emitted + replayed`` is bit-identical to a no-fault run.
+  * **sampled** requests restart from the original prompt with the full
+    budget: sample streams are seeded per replica, so the emitted prefix
+    is not reproducible elsewhere and must not be stitched.
+
+The engine calls the three ``record_*`` hooks (duck-typed — the serving
+plane takes any object with these methods, keeping the layering: the
+cluster plane knows the engine, never the reverse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class JournalEntry:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int]
+    temperature: float
+    top_p: float
+    #: host-observed tokens, in emission order (never device-resident)
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    def remaining(self) -> int:
+        return max(self.max_new_tokens - len(self.emitted), 0)
+
+    def resume_prompt(self) -> List[int]:
+        """The token prefix a survivor teacher-forces through on a
+        greedy resume: original prompt plus everything already served."""
+        return list(self.prompt) + list(self.emitted)
+
+
+class RequestJournal:
+    """Per-replica journal of every OPEN request on that replica.
+
+    Bounded by construction: a finished request has nothing left to
+    replay, so ``record_finish`` prunes its entry — the journal's size
+    is O(in-flight requests), never O(requests ever served)."""
+
+    def __init__(self, replica_id: int) -> None:
+        self.replica_id = replica_id
+        self.entries: Dict[int, JournalEntry] = {}
+        self.tokens_recorded = 0
+        self.finished_total = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -- engine hooks (serving plane calls these, duck-typed) -----------
+    def record_submit(self, req, temperature: float,
+                      top_p: float) -> None:
+        self.entries[req.rid] = JournalEntry(
+            req.rid, list(req.prompt), req.max_new_tokens, req.eos_id,
+            temperature, top_p,
+        )
+
+    def record_token(self, req, tok: int) -> None:
+        e = self.entries.get(req.rid)
+        if e is not None:
+            e.emitted.append(int(tok))
+            self.tokens_recorded += 1
+
+    def record_finish(self, req) -> None:
+        e = self.entries.pop(req.rid, None)
+        if e is not None:
+            e.done = True
+            self.finished_total += 1
+
+    # -- lifecycle plane -------------------------------------------------
+    def open_entries(self) -> List[JournalEntry]:
+        """Entries the replica died owing.  Finished entries were
+        pruned at record_finish, so everything still here is open."""
+        return list(self.entries.values())

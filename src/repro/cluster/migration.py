@@ -21,24 +21,31 @@ sharing the migrated prefix route to the destination afterwards.
 
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 from ..memory.prefix_cache import prefix_block_keys as prefix_keys
 
 __all__ = ["migrate_prefix", "prefix_keys"]
 
 
-def migrate_prefix(group, prompt: Sequence[int], src: int, dst: int,
-                   *, evict_src: bool = True) -> Dict[str, int]:
+def migrate_prefix(group, prompt, src: int, dst: int, *,
+                   keys: Optional[Sequence[tuple]] = None,
+                   evict_src: bool = True,
+                   tag: str = "migration") -> Dict[str, int]:
     """Move the cached prefix of ``prompt`` from replica ``src`` to
     ``dst`` under a cluster hold.  Returns a report dict; the
     ``src_unreclaimed_during_hold`` field is the mid-flight safety
-    evidence tests assert on (evicted pages retired-but-held)."""
+    evidence tests assert on (evicted pages retired-but-held).
+
+    ``keys`` overrides the prompt-derived key list (``prompt`` may then
+    be None) — the drain path passes the source cache's full key dump
+    so replica retirement rides this exact hold-protected sequence."""
     if src == dst:
         raise ValueError("source and destination replica are the same")
     src_eng = group.engines[src]
     dst_eng = group.engines[dst]
-    keys = prefix_keys(prompt, src_eng.block)
+    if keys is None:
+        keys = prefix_keys(prompt, src_eng.block)
     report = {
         "keys": len(keys), "exported": 0, "imported": 0,
         "already_cached": 0, "evicted": 0,
@@ -46,7 +53,7 @@ def migrate_prefix(group, prompt: Sequence[int], src: int, dst: int,
     }
     if not keys:
         return report
-    with group.ledger.hold("migration"):
+    with group.ledger.hold(tag):
         blocks = src_eng.export_prefix(keys)
         report["exported"] = len(blocks)
         report["already_cached"] = sum(

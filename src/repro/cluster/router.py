@@ -30,7 +30,12 @@ from ..memory.prefix_cache import prefix_block_keys
 
 
 class Router:
-    """Strategy interface: ``pick`` returns a replica index."""
+    """Strategy interface: ``pick`` returns a LIVE replica index.
+
+    Routers only ever see ``group.live_ids()`` — a crashed or retired
+    replica leaves the target set the moment its flag flips, which is
+    what makes ``drain_replica``/``add_replica`` re-target atomically
+    (no router has partial-membership state to migrate)."""
 
     name = "abstract"
 
@@ -45,7 +50,8 @@ class RoundRobinRouter(Router):
         self._next = 0
 
     def pick(self, group, prompt: Sequence[int]) -> int:
-        r = self._next % len(group.engines)
+        live = group.live_ids()
+        r = live[self._next % len(live)]
         self._next += 1
         return r
 
@@ -60,7 +66,7 @@ class LeastLoadedRouter(Router):
         # long prompt is only partially admitted); ties -> shallowest
         # queue -> lowest replica id
         return min(
-            range(len(group.engines)),
+            group.live_ids(),
             key=lambda i: (
                 -group.engines[i].effective_free_pages(),
                 group.engines[i].sched.queue_depth(),
@@ -76,11 +82,12 @@ class PrefixAffinityRouter(Router):
         self._fallback = LeastLoadedRouter()
 
     def pick(self, group, prompt: Sequence[int]) -> int:
-        keys = prefix_block_keys(prompt, group.engines[0].block)
+        live = group.live_ids()
+        keys = prefix_block_keys(prompt, group.engines[live[0]].block)
         best_r, best_len = -1, 0
         if keys:
-            for i, eng in enumerate(group.engines):
-                n = eng.prefix_cache.match_len(keys)
+            for i in live:
+                n = group.engines[i].prefix_cache.match_len(keys)
                 if n > best_len:  # strict: ties keep the earliest replica
                     best_r, best_len = i, n
         if best_r >= 0:

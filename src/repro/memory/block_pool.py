@@ -52,6 +52,27 @@ class ShardedPoolSet:
             raise ValueError(f"shard {sid} already registered")
         self.pools[sid] = pool
 
+    def grow(self) -> int:
+        """Append a fresh shard slot for a replica added to a LIVE group
+        (``ReplicaGroup.add_replica``); returns the new shard id, which
+        the new replica's BlockPool registers under."""
+        self.pools.append(None)
+        self.n_shards += 1
+        return self.n_shards - 1
+
+    def retire_shard(self, shard_id: int) -> None:
+        """Drop a drained (or dead) replica's shard: its pages leave the
+        aggregate capacity/pressure signals entirely.  The slot stays
+        allocated so surviving shard ids are stable."""
+        if not 0 <= shard_id < self.n_shards:
+            raise ValueError(
+                f"shard_id {shard_id} out of range for "
+                f"{self.n_shards} shards"
+            )
+        if self.pools[shard_id] is None:
+            raise ValueError(f"shard {shard_id} is not registered")
+        self.pools[shard_id] = None
+
     def _live(self) -> List["BlockPool"]:
         return [p for p in self.pools if p is not None]
 
@@ -165,6 +186,12 @@ class BlockPool:
         """Host-actor hold on this shard's stamp domain: pages retired
         while it is open are not reclaimed until it releases."""
         return self.policy.hold(tag)
+
+    def force_quiesce(self) -> dict:
+        """Lifecycle plane: forcibly expire this shard's whole stamp
+        domain (its replica was declared dead or drained) — every open
+        hold force-released, every in-flight step handle abandoned."""
+        return self.policy.force_quiesce()
 
     # ------------------------------------------------------------------
     # observability

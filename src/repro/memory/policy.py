@@ -58,18 +58,22 @@ class PolicyHold:
     cluster plane composes these per-replica holds into cross-replica
     holds (:class:`repro.cluster.ClusterLedger`)."""
 
-    __slots__ = ("tag", "released", "_policy")
+    __slots__ = ("tag", "released", "forced", "_policy")
 
     def __init__(self, policy: "ReclamationPolicy", tag: str) -> None:
         self.tag = tag
         self.released = False
+        #: True iff a third party revoked this hold (heartbeat death)
+        self.forced = False
         self._policy = policy
+        policy._track_hold(self)
 
     def release(self) -> None:
         if self.released:
             return
         self.released = True
         self._do_release()
+        self._policy._untrack_hold(self)
         self._policy.holds_open -= 1
 
     def _do_release(self) -> None:
@@ -129,8 +133,13 @@ class ReclamationPolicy:
         self._open_holds: Set[PolicyHold] = set()
         self._held: List[Tuple[int, List[int]]] = []
         self._held_pages = 0
+        # every not-yet-released hold on this domain, regardless of
+        # mechanism (stamp / region / buffered) — what force_quiesce
+        # revokes when the domain's owner is declared dead
+        self._live_holds: Set[PolicyHold] = set()
         self.holds_issued = 0
         self.holds_open = 0
+        self.force_released = 0
 
     def bind(self, pool) -> None:
         # a policy routes reclaimed pages to ONE pool's free lists;
@@ -217,6 +226,60 @@ class ReclamationPolicy:
             self._retire(slot, pages)
         self.reclaim()
 
+    def _track_hold(self, h: PolicyHold) -> None:
+        with self._hold_lock:
+            self._live_holds.add(h)
+
+    def _untrack_hold(self, h: PolicyHold) -> None:
+        with self._hold_lock:
+            self._live_holds.discard(h)
+
+    # -- forced expiry (lifecycle plane) --------------------------------
+    def force_release(self, hold: PolicyHold) -> None:
+        """Revoke ``hold`` WITHOUT its owner's cooperation — the paper's
+        forced stamp expiry at the serving layer.  The cluster lifecycle
+        plane calls this once a hold's owner misses its heartbeat
+        deadline; the hold object becomes inert (a late cooperative
+        ``release()`` is a no-op).  Mechanism per scheme: native stamp
+        ``force_expire`` for stamp-it, region force-exit for the core
+        region schemes, buffered-flush for hazard/LFRC."""
+        if hold.released:
+            return
+        hold.released = True
+        hold.forced = True
+        self.force_released += 1
+        self._force_release_impl(hold)
+        self._untrack_hold(hold)
+        self.holds_open -= 1
+
+    def _force_release_impl(self, hold: PolicyHold) -> None:
+        # buffered-flush default (hazard/LFRC and the native analogues):
+        # drop the hold from the open set; the last one out un-parks the
+        # whole hold buffer into the scheme's own retire path
+        self._close_buffered_hold(hold)
+
+    def force_quiesce(self) -> Dict[str, int]:
+        """Expire this whole stamp domain: force-release every open hold
+        and abandon every in-flight step handle (the issuer is presumed
+        dead — nothing will ever complete them), then reclaim.  Called by
+        the lifecycle plane when the replica owning this domain is
+        declared dead or drained out of the group."""
+        holds = 0
+        with self._hold_lock:
+            live = list(self._live_holds)
+        for h in live:
+            if not h.released:
+                self.force_release(h)
+                holds += 1
+        steps = self._abandon_steps()
+        self.reclaim()
+        return {"holds": holds, "steps": steps}
+
+    def _abandon_steps(self) -> int:
+        """Drop every in-flight step handle of a dead issuer; returns the
+        number abandoned.  Policies with step state override."""
+        return 0
+
     # -- observability --------------------------------------------------
     def unreclaimed(self) -> int:
         with self._hold_lock:
@@ -299,6 +362,18 @@ class StampItPolicy(ReclamationPolicy):
         self.holds_open += 1
         return h
 
+    def _force_release_impl(self, hold: PolicyHold) -> None:
+        # native forced expiry: drop the hold's stamp from the active
+        # set without a cooperative complete — the paper's mitigation
+        # for a stalled/crashed thread, verbatim
+        self.ledger.force_expire(hold.stamp)
+
+    def _abandon_steps(self) -> int:
+        # a dead issuer's step stamps would pin lowest_active forever;
+        # expire the whole active set (holds were force-released first,
+        # so what remains is step stamps)
+        return self.ledger.force_expire_all()
+
     def _unreclaimed(self) -> int:
         return self.ledger.unreclaimed()
 
@@ -353,6 +428,14 @@ class EpochPolicy(ReclamationPolicy):
 
     def reclaim(self) -> None:
         self._try_advance()
+
+    def _abandon_steps(self) -> int:
+        with self._lock:
+            n = len(self._inflight_epoch)
+            self._inflight_epoch.clear()
+        for _ in range(3):  # drain all three limbo generations
+            self._try_advance()
+        return n
 
     def _unreclaimed(self) -> int:
         return sum(len(b) for b in self._limbo)
@@ -411,6 +494,13 @@ class ScanPolicy(ReclamationPolicy):
     def reclaim(self) -> None:
         self._scan_reclaim()
 
+    def _abandon_steps(self) -> int:
+        with self._lock:
+            n = len(self._inflight)
+            self._inflight.clear()
+        self._scan_reclaim()
+        return n
+
     def _unreclaimed(self) -> int:
         return len(self._pending)
 
@@ -467,6 +557,15 @@ class RefcountPolicy(ReclamationPolicy):
                     self._pending.add(ref)
         for slot, p in free:
             self.release(slot, p)
+
+    def _abandon_steps(self) -> int:
+        # reap dead steps through the normal completion path: their
+        # counters decrement and zero-count pending pages free
+        with self._lock:
+            handles = list(self._inflight)
+        for h in handles:
+            self.complete_step(h)
+        return len(handles)
 
     def _unreclaimed(self) -> int:
         return len(self._pending)
@@ -629,6 +728,25 @@ class CoreSchemeAdapter(ReclamationPolicy):
             self.reclaimer._on_thread_detach(rec)
             rec.in_use.store(0)
             self.reclaimer.flush()
+
+    def _force_release_impl(self, hold: PolicyHold) -> None:
+        if isinstance(hold, _RegionHold):
+            # region force-exit: the parked paper-thread is reaped by a
+            # third party — its record leaves the region and detaches,
+            # un-blocking the scheme's grace periods
+            self._close_region_hold(hold._rec)
+        else:  # pointer-based schemes hold via the buffered fallback
+            super()._force_release_impl(hold)
+
+    def _abandon_steps(self) -> int:
+        # reap each dead step's paper-thread: guards reset, record
+        # leaves its region and detaches — the reclaimer then advances
+        # under its own rules as if the thread had exited cleanly
+        with self._lock:
+            handles = list(self._steps)
+        for h in handles:
+            self.complete_step(h)
+        return len(handles)
 
     def _unreclaimed(self) -> int:
         with self._lock:

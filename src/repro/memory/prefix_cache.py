@@ -87,6 +87,12 @@ class PrefixCache:
                 e.pins -= 1
 
     # -- cluster-plane probes (router affinity / migration) ------------
+    def keys(self) -> List[Tuple]:
+        """All cached keys in insertion order (stat-neutral) — the
+        drain-time migration's export list."""
+        with self._lock:
+            return list(self._map)
+
     def get(self, key: Tuple) -> Optional[PrefixCacheEntry]:
         """Stat-neutral lookup of a single key (no pin, no hit/miss)."""
         with self._lock:

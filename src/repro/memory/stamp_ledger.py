@@ -165,6 +165,19 @@ class StampLedger:
             self._active.pop(stamp, None)
         self.reclaim()
 
+    def force_expire_all(self) -> int:
+        """Wholesale forced expiry: drop EVERY active stamp — steps and
+        holds alike — of a domain whose owner was declared dead (the
+        cluster lifecycle plane's domain force-expire).  Returns the
+        number of stamps expired."""
+        with self._lock:
+            n = len(self._active)
+            self._active.clear()
+            self.scan_steps += len(self._issue_q)
+            self._issue_q.clear()
+        self.reclaim()
+        return n
+
 
 class _Hold:
     def __init__(self, ledger: StampLedger, tag: str) -> None:

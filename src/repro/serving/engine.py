@@ -68,6 +68,7 @@ class ServingEngine:
         replica_id: int = 0,
         params: Any = None,
         shard_set: Optional[ShardedPoolSet] = None,
+        journal: Any = None,
     ) -> None:
         cfg = model.cfg
         assert cache_layout(cfg) == "paged", (
@@ -94,6 +95,14 @@ class ServingEngine:
         # cluster plane: which data-parallel replica this engine is; its
         # pool is that replica's shard of the cluster's logical pool
         self.replica_id = replica_id
+        self.temperature = temperature
+        self.top_p = top_p
+        # lifecycle plane: replay journal (duck-typed: any object with
+        # record_submit/record_token/record_finish — the engine never
+        # imports the cluster plane), fault-injection and drain state
+        self.journal = journal
+        self.crashed = False  # fault injection: step() refuses to run
+        self.retired = False  # drained out of a live group
 
         shape = ShapeConfig("engine", "decode", max_seq, max_slots)
         if params is None:
@@ -167,7 +176,10 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
-        return self.sched.submit(prompt, max_new_tokens, eos_id)
+        req = self.sched.submit(prompt, max_new_tokens, eos_id)
+        if self.journal is not None:
+            self.journal.record_submit(req, self.temperature, self.top_p)
+        return req
 
     def effective_free_pages(self) -> int:
         """Chunk-aware router load signal: free pages minus the pages
@@ -186,13 +198,19 @@ class ServingEngine:
         return self.sched.finished
 
     def step(self) -> None:
+        if self.crashed:
+            raise RuntimeError(
+                f"replica {self.replica_id} is crashed (fault injection)"
+            )
         self.steps += 1
         # 1. retire the oldest in-flight step if the pipeline is full
         while self.sched.pipeline_full():
             self._complete_oldest()
         # 2. admissions (chunked admissions only OCCUPY a slot here;
-        #    their prompt tokens ride the fused step one chunk at a time)
-        while self.sched.waiting and self.sched.free_slots:
+        #    their prompt tokens ride the fused step one chunk at a time;
+        #    a draining replica pauses here and only finishes what it has)
+        while (not self.sched.admissions_paused and self.sched.waiting
+               and self.sched.free_slots):
             if not self._admit(self.sched.waiting[0]):
                 break
             self.sched.waiting.popleft()
@@ -218,6 +236,37 @@ class ServingEngine:
         """Pin this replica's stamp domain (see ReclamationPolicy.hold);
         the ClusterLedger composes one of these per replica."""
         return self.pool.hold(tag)
+
+    def adopt(self, req: Request) -> Request:
+        """Cluster requeue path (drain): take over a request another
+        replica accepted but never admitted."""
+        self.sched.adopt(req)
+        if self.journal is not None:
+            self.journal.record_submit(req, self.temperature, self.top_p)
+        return req
+
+    def pause_admissions(self) -> None:
+        """Live drain, phase 1: stop admitting; requests already in a
+        slot (active or mid chunked-prefill) run to completion."""
+        self.sched.admissions_paused = True
+
+    def force_quiesce(self) -> dict:
+        """Lifecycle plane, dead-replica reaping: abandon the in-flight
+        pipeline (nothing will ever complete it — the replica crashed)
+        and forcibly expire every hold and step handle in this replica's
+        stamp domain, so pages it pinned — its own AND, via cluster
+        holds, other replicas' — can reclaim.  The engine object
+        survives as a husk and is never stepped again."""
+        self.sched.inflight.clear()
+        return self.pool.force_quiesce()
+
+    def free_device_state(self) -> None:
+        """Retired-husk memory release: drop this replica's
+        device-resident KV state so a drained/dead engine object does
+        not pin HBM for the life of the group.  Params are SHARED with
+        live replicas and stay; stats() keeps working off counters.
+        The husk must never be stepped again."""
+        self.dev.cache = None
 
     def export_prefix(self, keys: Sequence[tuple]) -> List[tuple]:
         """Migration source: read the cached KV blocks for the leading
@@ -542,26 +591,33 @@ class ServingEngine:
             if first_dev is not None:
                 # the step consuming token 1 has completed, so this
                 # device_get returns a ready value — no pipeline stall
-                req.generated.append(int(jax.device_get(first_dev)))
+                self._emit(req, int(jax.device_get(first_dev)))
                 req._first_dev = None  # type: ignore[attr-defined]
-                if not req.first_token_at:
-                    req.first_token_at = time.time()
             # this step consumed the token at position lengths_snap[slot];
             # its output is a real sample only past the prompt
             pos = int(lengths_snap[slot])
             if pos + 1 < len(req.prompt):
                 continue  # teacher-forcing internal step
             tok = int(tokens[slot, 0])
-            req.generated.append(tok)
-            if not req.first_token_at:
-                req.first_token_at = time.time()
+            self._emit(req, tok)
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if len(req.generated) >= req.max_new_tokens or hit_eos:
                 self._finish(slot, req)
 
+    def _emit(self, req: Request, tok: int) -> None:
+        """Host-observed token emission: the ONLY place generated tokens
+        appear, so the replay journal can never miss one."""
+        req.generated.append(tok)
+        if not req.first_token_at:
+            req.first_token_at = time.time()
+        if self.journal is not None:
+            self.journal.record_token(req, tok)
+
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True
         req.finished_at = time.time()
+        if self.journal is not None:
+            self.journal.record_finish(req)
         self.sched.finished.append(req)
         pages = self.sched.release_slot(slot)
         # donate full prompt blocks to the prefix cache; retire the rest

@@ -59,6 +59,9 @@ class Scheduler:
         self.admitting: Dict[int, Request] = {}
         self.finished: List[Request] = []
         self.free_slots: List[int] = list(range(max_slots))
+        # lifecycle plane: a draining replica stops admitting (waiting
+        # requests requeue onto survivors) but finishes what it has
+        self.admissions_paused = False
         # (stamp, tokens_dev, active snapshot, lengths snapshot)
         self.inflight: Deque[Tuple[int, Any, Dict[int, Request],
                                    np.ndarray]] = deque()
@@ -82,6 +85,25 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.active or self.admitting
                     or self.inflight)
+
+    def take_waiting(self) -> List[Request]:
+        """Drain helper: hand the not-yet-admitted queue back to the
+        cluster so those requests re-route to surviving replicas."""
+        out = list(self.waiting)
+        self.waiting.clear()
+        return out
+
+    def adopt(self, req: Request) -> Request:
+        """Adopt a request requeued from a draining replica: it joins
+        this scheduler's waiting queue under a fresh LOCAL rid (rids are
+        per-replica), keeping object identity so the submitter's handle
+        stays valid."""
+        req.rid = self._next_rid
+        self._next_rid += 1
+        req.slot = -1
+        req.replica = self.replica_id
+        self.waiting.append(req)
+        return req
 
     def queue_depth(self) -> int:
         """Router load signal: requests not yet fully served here."""

@@ -136,19 +136,24 @@ def test_group_matches_single_engine(model):
 
 def test_group_checkpoint_hold_defers_then_recovers(model):
     """A checkpoint hold spanning finishes pins their retired pages on
-    every replica; release + reclaim returns the cluster to zero."""
+    every replica; teardown (`drain`) releases leaked holds FIRST, so a
+    forgotten hold can no longer leave `unreclaimed > 0` forever."""
     group = ReplicaGroup(model, 2, max_slots=1, max_seq=MAX_SEQ,
                          pipeline_depth=2, extra_pages_per_slot=4)
     for p in make_prompts(4, lo=60, hi=100, seed=23):
         group.submit(p, max_new_tokens=3)
     hold = group.hold("checkpoint")
     group.run_until_done()
-    group.drain()
-    # requests finished and retired pages under the open hold
+    # requests finished and retired pages under the open hold; local
+    # maintenance cannot free them while it is open
     assert group.stats()["finished"] == 4
-    assert group.shards.unreclaimed() > 0
-    hold.release()
     group.reclaim()
+    assert group.shards.unreclaimed() > 0
+    # the hold is never cooperatively released — drain() releases it
+    # (the teardown-leak fix), and teardown is clean
+    group.drain()
+    assert hold.released
+    assert group.ledger.open_holds == 0
     assert group.shards.unreclaimed() == 0
 
 

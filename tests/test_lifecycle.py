@@ -1,0 +1,477 @@
+"""Lifecycle control plane: heartbeats, shared-fate hold expiry, live
+drain/scale and request replay (docs/cluster_serving.md, lifecycle
+section).
+
+The acceptance scenario — kill 1 of 4 replicas mid-traffic under a
+periodic checkpoint hold owned by the victim — is asserted across all
+eight paper policies: the survivors' unreclaimed returns to the
+pre-hold baseline within a bounded number of steps after the heartbeat
+timeout, and the dead replica's greedy in-flight requests finish on
+survivors with token streams identical to a no-fault run.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterLedger,
+    LifecycleManager,
+    ReplicaGroup,
+    RequestJournal,
+)
+from repro.configs import ARCHS, smoke_config
+from repro.memory import PAPER_POLICIES, BlockPool, ShardedPoolSet
+from repro.models import Model
+from repro.serving import ServingEngine
+
+MAX_SEQ = 512
+#: bounded recovery: kill -> unreclaimed back at baseline within the
+#: heartbeat timeout plus this slack (post-expiry reclaim rounds)
+UNBLOCK_SLACK = 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(smoke_config(ARCHS["qwen2-0.5b"]))
+
+
+def make_prompts(n, lo=30, hi=110, seed=3):
+    rs = np.random.RandomState(seed)
+    return [
+        list(rs.randint(1, 500, rs.randint(lo, hi)).astype(int))
+        for _ in range(n)
+    ]
+
+
+PROMPTS = make_prompts(6, seed=41)
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def reference(model):
+    """No-fault greedy streams (policy- and replica-count-independent:
+    the policy-invariance and group-equality tests prove it)."""
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        extra_pages_per_slot=4)
+    reqs = [eng.submit(p, max_new_tokens=MAX_NEW) for p in PROMPTS]
+    eng.run_until_done()
+    eng.drain()
+    return {tuple(r.prompt): list(r.generated) for r in reqs}
+
+
+def _reclaim(pool, rounds=4):
+    for _ in range(rounds):
+        pool.reclaim()
+
+
+# ---------------------------------------------------------------------------
+# forced expiry, pool level (all eight paper policies; no engines)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_force_expire_owner_unblocks_survivors(policy):
+    """A dead owner's cluster hold pins retires on EVERY replica until
+    the lifecycle plane revokes it through the policy's native forced
+    path — after which the survivors reclaim in full."""
+    shards = ShardedPoolSet(3)
+    pools = [
+        BlockPool(1, 8, policy=policy, shard_id=i, shard_set=shards)
+        for i in range(3)
+    ]
+    ledger = ClusterLedger([p.policy for p in pools])
+    ledger.hold("checkpoint", owner=2)  # writer runs on replica 2
+    pages = [p.alloc(0, 3) for p in pools]
+    for p, pg in zip(pools, pages):
+        p.free(0, pg)  # retired under the hold, on every shard
+        _reclaim(p)
+    assert shards.unreclaimed() == 9, policy
+    # replica 2 "crashes": nothing will release the hold cooperatively
+    n = ledger.force_expire_owner(2)
+    assert n == 1
+    for p in pools:
+        _reclaim(p)
+    assert shards.unreclaimed() == 0, policy
+    assert ledger.open_holds == 0 and ledger.force_expired == 1
+    # each domain saw exactly one forced release
+    assert all(p.policy.force_released == 1 for p in pools)
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_force_quiesce_abandons_steps_and_holds(policy):
+    """Wholesale domain expiry: a dead replica's own in-flight step
+    handles and local holds stop pinning its shard."""
+    pool = BlockPool(1, 8, policy=policy)
+    pages = pool.alloc(0, 4)
+    pool.begin_step([(0, p) for p in pages])  # never completes
+    pool.hold("chunk-prefill")  # never released
+    pool.free(0, pages)
+    _reclaim(pool)
+    assert pool.unreclaimed() > 0, policy
+    rep = pool.force_quiesce()
+    _reclaim(pool)
+    assert pool.unreclaimed() == 0, policy
+    assert pool.free_pages_total() == 8, policy
+    assert rep["holds"] == 1 and rep["steps"] == 1, (policy, rep)
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_forced_hold_makes_cooperative_release_a_noop(policy):
+    pool = BlockPool(1, 4, policy=policy)
+    h = pool.hold("ckpt")
+    pool.policy.force_release(h)
+    assert h.released and h.forced
+    h.release()  # late cooperative release: must not double-account
+    assert pool.policy.holds_open == 0
+    assert pool.policy.force_released == 1
+
+
+def test_cluster_hold_context_manager_releases_on_exception():
+    """Satellite: `with ledger.hold(...)` cannot leak a cluster-wide pin
+    — an exception mid-actor releases every per-replica part."""
+    pools = [BlockPool(1, 4, policy="stamp-it") for _ in range(2)]
+    ledger = ClusterLedger([p.policy for p in pools])
+    with pytest.raises(RuntimeError):
+        with ledger.hold("checkpoint"):
+            pages = pools[0].alloc(0, 2)
+            pools[0].free(0, pages)
+            raise RuntimeError("writer died mid-snapshot")
+    assert ledger.open_holds == 0
+    _reclaim(pools[0])
+    assert pools[0].unreclaimed() == 0
+    assert pools[0].free_pages_total() == 4
+
+
+# ---------------------------------------------------------------------------
+# ShardedPoolSet: retire + grow keep the aggregates consistent
+# ---------------------------------------------------------------------------
+def test_sharded_pool_set_aggregates_after_retire_and_add():
+    shards = ShardedPoolSet(3)
+    pools = [
+        BlockPool(1, 8, policy="stamp-it", shard_id=i, shard_set=shards)
+        for i in range(3)
+    ]
+    pools[1].alloc(0, 5)
+    assert shards.pages_total() == 24
+    assert shards.free_pages() == 19
+    # retire shard 1: its capacity, pressure and scan signals all leave
+    held = pools[1].alloc(0, 1)
+    pools[1].free(0, held)
+    shards.retire_shard(1)
+    assert shards.pages_total() == 16
+    assert shards.free_pages() == 16
+    assert shards.unreclaimed() == 0  # the dead shard's limbo is gone
+    scans_before = shards.scan_steps() + shards.ledger_scan_steps()
+    # a retired shard cannot be retired twice
+    with pytest.raises(ValueError):
+        shards.retire_shard(1)
+    # grow + register a fresh shard; aggregates pick it up exactly once
+    sid = shards.grow()
+    assert sid == 3
+    fresh = BlockPool(1, 4, policy="stamp-it", shard_id=sid,
+                      shard_set=shards)
+    assert shards.pages_total() == 20
+    assert shards.free_pages() == 20
+    fresh.alloc(0, 2)
+    assert shards.free_pages() == 18
+    # signal plumbing stays additive over live shards only
+    pages = fresh.alloc(0, 1)
+    fresh.free(0, pages)
+    fresh.reclaim()
+    assert shards.unreclaimed() == 0
+    assert shards.scan_steps() + shards.ledger_scan_steps() >= scans_before
+
+
+# ---------------------------------------------------------------------------
+# journal
+# ---------------------------------------------------------------------------
+def test_journal_records_every_emitted_token(model):
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        extra_pages_per_slot=4,
+                        journal=RequestJournal(0))
+    reqs = [eng.submit(p, max_new_tokens=MAX_NEW) for p in PROMPTS[:3]]
+    eng.run_until_done()
+    eng.drain()
+    # bounded journal: finished entries prune (replay only ever needs
+    # open entries); the totals survive
+    assert len(eng.journal) == 0
+    assert eng.journal.open_entries() == []
+    assert eng.journal.finished_total == 3
+    assert eng.journal.tokens_recorded == sum(
+        len(r.generated) for r in reqs)
+
+
+def test_journal_open_entries_mid_flight(model):
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        extra_pages_per_slot=4,
+                        journal=RequestJournal(0))
+    req = eng.submit(PROMPTS[0], max_new_tokens=8)
+    for _ in range(6):
+        eng.step()
+    open_entries = eng.journal.open_entries()
+    assert len(open_entries) == 1
+    e = open_entries[0]
+    # only host-observed tokens are journaled (device state is lost on
+    # a crash); whatever is recorded is a prefix of the final stream
+    assert e.emitted == req.generated[: len(e.emitted)]
+    assert e.greedy
+    assert e.remaining() == 8 - len(e.emitted)
+    assert e.resume_prompt() == list(req.prompt) + list(e.emitted)
+    eng.run_until_done()
+    eng.drain()
+    assert eng.journal.open_entries() == []
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: kill 1 of 4 mid-traffic, all eight policies
+# ---------------------------------------------------------------------------
+def _drive_kill(model, policy, reference, n_replicas=4, timeout=3):
+    group = ReplicaGroup(model, n_replicas, policy=policy,
+                         router="round-robin", max_slots=2,
+                         max_seq=MAX_SEQ, pipeline_depth=2,
+                         extra_pages_per_slot=4)
+    mgr = LifecycleManager(group, heartbeat_timeout=timeout)
+    reqs = [group.submit(p, max_new_tokens=MAX_NEW) for p in PROMPTS]
+    baseline = group.shards.unreclaimed()
+    # checkpoint writer on replica 0 opens a cross-replica hold...
+    group.hold("checkpoint", owner=0)
+    for _ in range(3):
+        group.step()
+    # ...and replica 0 crashes with the hold open and requests in flight
+    victim_load = group.engines[0].sched.has_work()
+    group.kill_replica(0)
+    killed_at = group.steps
+    unblocked_at = None
+    while group.has_work():
+        group.step()
+        if unblocked_at is None and 0 in mgr.dead:
+            group.reclaim()
+            if group.shards.unreclaimed() <= baseline:
+                unblocked_at = group.steps
+        assert group.steps - killed_at < 500, "kill run did not converge"
+    group.drain()
+    return group, mgr, reqs, killed_at, unblocked_at, victim_load
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_kill_one_of_four_unblocks_and_replays(model, policy, reference):
+    group, mgr, reqs, killed_at, unblocked_at, victim_load = _drive_kill(
+        model, policy, reference)
+    # death declared by missed heartbeats alone
+    assert mgr.dead == {0}
+    assert mgr.deaths[0][0] - killed_at >= mgr.timeout - 1
+    # the victim's cluster hold was revoked through the forced path
+    assert mgr.holds_force_expired == 1
+    assert group.ledger.force_expired == 1
+    # bounded recovery: survivors' unreclaimed back at baseline within
+    # timeout + slack cluster steps of the kill
+    assert unblocked_at is not None, policy
+    assert unblocked_at - killed_at <= mgr.timeout + UNBLOCK_SLACK, (
+        policy, unblocked_at - killed_at)
+    assert group.shards.unreclaimed() == 0
+    # the blocked window was real: pages sat pinned until expiry
+    assert mgr.reclamation_blocked_steps > 0
+    # every request — including the victim's replayed ones — finished
+    # with the no-fault greedy stream, token for token
+    assert victim_load  # the kill actually interrupted work
+    assert mgr.replays_submitted > 0
+    assert mgr.replays_finished == mgr.replays_submitted
+    # (fully-served entries missing only the finish notification are
+    # counted separately as replays_recovered, never re-admitted)
+    for r in reqs:
+        assert r.done, (policy, r.rid)
+        assert list(r.generated) == reference[tuple(r.prompt)], (
+            policy, r.rid)
+    # survivors only from here on; the dead husk pins no HBM
+    assert group.live_ids() == [1, 2, 3]
+    assert group.engines[0].dev.cache is None
+
+
+def test_kill_detection_is_heartbeat_only(model):
+    """An idle-but-alive replica never trips the deadline; a killed one
+    does even with no work (its holds still matter)."""
+    group = ReplicaGroup(model, 2, max_slots=1, max_seq=MAX_SEQ,
+                         extra_pages_per_slot=4)
+    mgr = LifecycleManager(group, heartbeat_timeout=2)
+    group.hold("checkpoint", owner=1)  # idle replica 1 owns a hold
+    r = group.submit(PROMPTS[0], max_new_tokens=3)
+    group.run_until_done()
+    assert mgr.dead == set()  # idle != dead: replica 1 kept beating
+    group.kill_replica(1)
+    # the victim is IDLE (no work) and the cluster is otherwise done,
+    # so has_work() is False — run_until_done's bounded grace window
+    # must still advance the heartbeat clock until the silent owner's
+    # deadline fires and its hold force-expires
+    group.run_until_done()
+    assert mgr.dead == {1}
+    assert mgr.holds_force_expired == 1
+    assert r.done
+    group.drain()
+    assert group.shards.unreclaimed() == 0
+
+
+def test_kill_with_idle_survivors_still_detected(model, reference):
+    """The victim dies holding ALL the in-flight work while every
+    survivor is idle: run_until_done must keep the clock ticking on the
+    strength of the victim's un-served work alone (pending()), declare
+    the death and replay — no manual stepping, no live-engine work to
+    lean on."""
+    group = ReplicaGroup(model, 2, max_slots=1, max_seq=MAX_SEQ,
+                         router="round-robin", extra_pages_per_slot=4)
+    mgr = LifecycleManager(group, heartbeat_timeout=2)
+    r = group.submit(PROMPTS[0], max_new_tokens=MAX_NEW)  # -> replica 0
+    group.kill_replica(0)  # before a single step runs
+    group.run_until_done()
+    assert mgr.dead == {0}
+    assert r.done
+    assert list(r.generated) == reference[tuple(r.prompt)]
+    group.drain()
+    assert group.shards.unreclaimed() == 0
+
+
+def test_double_fault_rechains_replay(model, reference):
+    """The survivor HOSTING a replay dies too: its journal entry
+    describes the (untracked) replay request, which must be found,
+    re-replayed on the remaining replicas and stitched through the
+    chain back to the original client request."""
+    group = ReplicaGroup(model, 3, max_slots=1, max_seq=MAX_SEQ,
+                         router="round-robin", extra_pages_per_slot=4)
+    mgr = LifecycleManager(group, heartbeat_timeout=2)
+    r = group.submit(PROMPTS[0], max_new_tokens=MAX_NEW)  # -> replica 0
+    for _ in range(3):
+        group.step()
+    group.kill_replica(0)
+    while not mgr.replays:  # first death declared, replay submitted
+        group.step()
+    host = mgr.replays[0][1].replica
+    assert host != 0
+    group.kill_replica(host)  # second fault, mid-replay
+    group.run_until_done()
+    assert mgr.dead == {0, host}
+    assert len(mgr.replays) == 2  # the replay was itself replayed
+    assert r.done
+    assert list(r.generated) == reference[tuple(r.prompt)]
+    group.drain()
+    assert group.shards.unreclaimed() == 0
+
+
+def test_drain_replica_requeues_untracked_replay(model, reference):
+    """A lifecycle replay waiting (un-admitted) on a replica must
+    survive that replica being drained, even though replays are not
+    listed in group.requests."""
+    group = ReplicaGroup(model, 2, max_slots=2, max_seq=MAX_SEQ,
+                         router="round-robin", extra_pages_per_slot=4)
+    r = group.submit_replay(PROMPTS[0], MAX_NEW)  # waiting on replica 0
+    rep = group.drain_replica(0)
+    assert rep["requeued"] == 1 and r.replica == 1
+    group.run_until_done()
+    group.drain()
+    assert r.done
+    assert list(r.generated) == reference[tuple(r.prompt)]
+
+
+def test_heartbeat_must_be_monotone(model):
+    group = ReplicaGroup(model, 2, max_slots=1, max_seq=MAX_SEQ)
+    mgr = LifecycleManager(group, heartbeat_timeout=2)
+    mgr.beat(0, 5)
+    with pytest.raises(ValueError):
+        mgr.beat(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# live drain / scale
+# ---------------------------------------------------------------------------
+def test_drain_replica_migrates_retires_and_requeues(model, reference):
+    group = ReplicaGroup(model, 2, max_slots=2, max_seq=MAX_SEQ,
+                         router="round-robin", prefix_cache_entries=8,
+                         extra_pages_per_slot=6)
+    reqs = [group.submit(p, max_new_tokens=MAX_NEW) for p in PROMPTS[:2]]
+    group.run_until_done()
+    pages_before = group.shards.pages_total()
+    # queue un-admitted work on replica 0, then drain it live
+    extra = group.submit(PROMPTS[2], max_new_tokens=MAX_NEW)
+    assert extra.replica == 0
+    rep = group.drain_replica(0)
+    assert rep["requeued"] == 1 and extra.replica == 1
+    assert group.engines[0].retired
+    assert group.engines[0].dev.cache is None  # husk pins no HBM
+    assert group.live_ids() == [1]
+    assert group.shards.pages_total() < pages_before
+    # clean retirement: nothing pinned anywhere
+    assert group.shards.unreclaimed() == 0
+    group.run_until_done()
+    group.drain()
+    for r in reqs + [extra]:
+        assert r.done
+        assert list(r.generated) == reference[tuple(r.prompt)]
+    # draining the last live replica is refused
+    with pytest.raises(ValueError):
+        group.drain_replica(1)
+
+
+def test_drain_replica_moves_prefix_cache_and_router_follows(model):
+    from repro.models.transformer import BLOCK_SIZE
+
+    group = ReplicaGroup(model, 2, max_slots=2, max_seq=MAX_SEQ,
+                         router="prefix-affinity",
+                         prefix_cache_entries=8, extra_pages_per_slot=6)
+    prompt = make_prompts(1, lo=2 * BLOCK_SIZE + 4,
+                          hi=2 * BLOCK_SIZE + 5, seed=13)[0]
+    r1 = group.submit(prompt, max_new_tokens=4)
+    group.run_until_done()
+    src = group.route_trace[0][1]
+    assert len(group.engines[src].prefix_cache) == 2
+    rep = group.drain_replica(src)
+    dst = rep["migrated_to"]
+    assert rep["prefix_blocks_migrated"] == 2
+    assert len(group.engines[dst].prefix_cache) == 2
+    # the affinity router follows the migrated pages; bit-identical
+    r2 = group.submit(prompt, max_new_tokens=4)
+    assert group.route_trace[-1][1] == dst
+    group.run_until_done()
+    group.drain()
+    assert r2.generated == r1.generated
+    assert group.shards.unreclaimed() == 0
+
+
+def test_add_replica_live_and_router_targets_it(model, reference):
+    group = ReplicaGroup(model, 2, max_slots=2, max_seq=MAX_SEQ,
+                         router="round-robin", extra_pages_per_slot=4)
+    reqs = [group.submit(p, max_new_tokens=MAX_NEW) for p in PROMPTS[:2]]
+    group.run_until_done()
+    i = group.add_replica()
+    assert i == 2 and group.live_ids() == [0, 1, 2]
+    assert group.shards.pages_total() > 0
+    more = [group.submit(p, max_new_tokens=MAX_NEW)
+            for p in PROMPTS[2:5]]
+    # round-robin now cycles over three replicas, including the new one
+    assert {r for _, r in group.route_trace[2:]} == {0, 1, 2}
+    group.run_until_done()
+    group.drain()
+    for r in reqs + more:
+        assert r.done
+        assert list(r.generated) == reference[tuple(r.prompt)]
+    assert group.shards.unreclaimed() == 0
+
+
+def test_drain_add_sequence_is_deterministic(model):
+    """Router determinism survives membership changes: two identical
+    runs with the same drain/add events at the same points produce the
+    same route trace and the same streams."""
+
+    def run_once():
+        group = ReplicaGroup(model, 3, max_slots=2, max_seq=MAX_SEQ,
+                             router="round-robin",
+                             extra_pages_per_slot=4)
+        for p in PROMPTS[:3]:
+            group.submit(p, max_new_tokens=MAX_NEW)
+        group.run_until_done()
+        group.drain_replica(1)
+        for p in PROMPTS[3:5]:
+            group.submit(p, max_new_tokens=MAX_NEW)
+        group.add_replica()
+        group.submit(PROMPTS[5], max_new_tokens=MAX_NEW)
+        group.run_until_done()
+        group.drain()
+        return (list(group.route_trace),
+                [list(r.generated) for r in group.requests])
+
+    assert run_once() == run_once()
