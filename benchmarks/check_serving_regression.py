@@ -15,11 +15,17 @@ Gates, in order:
      default 3x — bounded TTFT independent of prompt length beyond one
      chunk), and every chunked row must still be one fused dispatch per
      step; an absent section is a SKIP.
-  4. **cluster flatness** — if ``BENCH_cluster.json`` exists, stamp-it's
+  4. **CoW fork + speculative lane** — if the baseline has a ``cow``
+     section, every row must have kept baseline-identical greedy tokens,
+     stayed one fused dispatch per step, saved pages at a ratio of at
+     least ``0.5 * best_of`` vs independent submits, and emitted at
+     least one token per dispatch with the speculative lane on; an
+     absent section is a SKIP.
+  5. **cluster flatness** — if ``BENCH_cluster.json`` exists, stamp-it's
      scan-steps/step must stay flat (max/min <= the recorded gate,
      default 2x) from 1 to N replicas while the periodic checkpoint hold
      is active; an absent file/section is a SKIP.
-  5. **fault recovery** — if ``BENCH_fault.json`` exists, every policy's
+  6. **fault recovery** — if ``BENCH_fault.json`` exists, every policy's
      ``steps_to_unblock`` (kill -> surviving replicas' unreclaimed back
      at the pre-hold baseline) must be present and within the recorded
      gate (heartbeat timeout + slack), and forced hold expiry must have
@@ -33,8 +39,8 @@ Gates, in order:
 Regenerate baselines after an intentional perf change with
 ``python -m benchmarks.serving_bench`` (add ``--sweep
 pipeline_depth,slots`` for the sweep section, ``--long-prompt`` for the
-TTFT section) and ``python -m benchmarks.cluster_bench``, then commit
-the JSONs.
+TTFT section, ``--best-of 4 --speculate 4`` for the CoW section) and
+``python -m benchmarks.cluster_bench``, then commit the JSONs.
 ``SERVING_BENCH_TOLERANCE`` (a float, e.g. ``0.25``) can widen the
 throughput gate on noisy shared runners.
 """
@@ -138,6 +144,47 @@ def _check_long_prompt(baseline) -> int:
     return 0
 
 
+def _check_cow(baseline) -> int:
+    rows = baseline.get("cow")
+    if not rows:
+        print("SKIP: no 'cow' section in baseline (run "
+              "`serving_bench --best-of 4 --speculate 4` to add one)")
+        return 0
+    bad = []
+    for r in rows:
+        n = r.get("best_of", 0)
+        gate = 0.5 * n
+        if not r.get("tokens_equal"):
+            bad.append((r.get("policy"), "tokens diverged from baseline"))
+        elif r.get("dispatches_per_step") != 1.0:
+            bad.append((r.get("policy"),
+                        f"dispatches_per_step={r.get('dispatches_per_step')}"))
+        elif r.get("pages_saved_ratio", 0) < gate:
+            bad.append((r.get("policy"),
+                        f"pages_saved_ratio={r.get('pages_saved_ratio')} "
+                        f"< 0.5*{n}={gate}"))
+        elif r.get("speculate_k", 0) and r.get("tokens_per_dispatch",
+                                               0) < 1.0:
+            bad.append((r.get("policy"),
+                        f"tokens_per_dispatch="
+                        f"{r.get('tokens_per_dispatch')} < 1.0"))
+        elif not r.get("forks_balanced", True):
+            bad.append((r.get("policy"), "fork refs leaked"))
+    shown = {r["policy"]: (r.get("pages_saved_ratio"),
+                           r.get("tokens_per_dispatch")) for r in rows}
+    print(f"CoW best-of-N (pages_saved_ratio, tokens/dispatch) by "
+          f"policy: {shown}")
+    if bad:
+        print(f"FAIL: CoW/speculative rows out of gate: {bad} — fork "
+              f"branches must share prompt pages (>= 0.5*N saved) and "
+              f"the speculative lane must never emit < 1 token per "
+              f"fused dispatch")
+        return 1
+    print(f"OK: all {len(rows)} CoW rows token-identical, "
+          f"single-dispatch and within the pages/tokens gates")
+    return 0
+
+
 def _check_cluster() -> int:
     if not BENCH_CLUSTER_JSON.exists():
         print("SKIP: no BENCH_cluster.json (run "
@@ -213,6 +260,9 @@ def main() -> int:
     if rc:
         return rc
     rc = _check_long_prompt(baseline)
+    if rc:
+        return rc
+    rc = _check_cow(baseline)
     if rc:
         return rc
     rc = _check_cluster()

@@ -252,6 +252,36 @@ def long_prompt_table():
     return "\n".join(lines)
 
 
+def cow_table():
+    """CoW fork + speculative lane: best-of-N groups sharing prompt
+    pages (pages-saved ratio vs independent submits) with the draft-and-
+    verify lane keeping >= 1 emitted token per fused dispatch."""
+    data = _load_serving_json()
+    if data is None or not data.get("cow"):
+        return ("(no cow section — run "
+                "`serving_bench --best-of 4 --speculate 4`)")
+    rows = data["cow"]
+    lines = [
+        "| policy | best-of | spec k | prompt pages | pages base/CoW | "
+        "saved ratio | copies | acceptance | tokens/dispatch | "
+        "dispatches/step |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["policy"], x["best_of"])):
+        lines.append(
+            f"| {r['policy']} | {r['best_of']} | {r['speculate_k']} | "
+            f"{r['prompt_pages']} | "
+            f"{r['pages_baseline']}/{r['pages_cow']} | "
+            f"{r['pages_saved_ratio']} | {r['cow_copies']} | "
+            f"{r['spec_acceptance']} | {r['tokens_per_dispatch']} | "
+            f"{r['dispatches_per_step']} |")
+    lines.append(
+        "\nGates (check_serving_regression.py): greedy tokens identical "
+        "to independent submits, saved ratio >= 0.5 x best-of, "
+        ">= 1 token per fused dispatch, one dispatch per step.")
+    return "\n".join(lines)
+
+
 def cluster_table():
     """Replica-scaling (cluster plane): scan-steps/step must stay flat
     for stamp-it from 1..N replicas with a periodic checkpoint hold."""
@@ -336,6 +366,8 @@ def main():
              sweep_table)
     _section("Chunked prefill: long-prompt TTFT (head-of-line blocking)",
              long_prompt_table)
+    _section("CoW fork + speculative lane (best-of-N page sharing)",
+             cow_table)
     _section("Cluster plane: replica scaling under checkpoint holds",
              cluster_table)
     _section("Lifecycle plane: replica kill, forced expiry, replay",

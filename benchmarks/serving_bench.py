@@ -13,7 +13,8 @@ path).
 
 ``python -m benchmarks.serving_bench`` writes ``BENCH_serving.json`` at
 the repo root — schema ``{"policies": [...], "sweep": [...],
-"long_prompt": [...]}`` — the serving-perf trajectory baseline that
+"long_prompt": [...], "cow": [...]}`` — the serving-perf trajectory
+baseline that
 ``benchmarks/check_serving_regression.py`` gates CI against (>10%
 stamp-it steps/sec drop fails the workflow; long-prompt p99 TTFT must
 stay flat in prompt length).  ``--sweep pipeline_depth,slots``
@@ -21,7 +22,10 @@ additionally emits the paper-style scaling rows (pipeline depth is the
 serving analogue of the paper's thread count: in-flight steps =
 concurrent critical regions); ``--long-prompt`` emits the chunked-vs-
 unchunked TTFT workload (one long prompt injected into continuous short
-traffic).  Sections are merge-written ROW-wise with stale-row pruning:
+traffic); ``--best-of N --speculate k`` emits the CoW fork +
+speculative-lane rows (pages saved vs independent submits, draft
+acceptance rate, tokens per dispatch).  Sections are merge-written
+ROW-wise with stale-row pruning:
 a policy or bench that no longer exists cannot leave ghost rows for
 ``benchmarks/make_report.py`` to render.
 """
@@ -54,9 +58,14 @@ SWEEP_SLOTS = (2, 4)
 LONG_PROMPT_LENS = (512, 1024)
 LONG_PROMPT_POLICIES = ("stamp-it", "hazard", "debra")
 
+#: CoW fork + speculative-lane workload: stamp-it plus one adapter-backed
+#: scheme (lfrc exercises the NATIVE per-fork reference-count path)
+COW_POLICIES = ("stamp-it", "lfrc")
+
 #: bench names this tool can produce — merge-written sections prune rows
 #: whose bench/policy no longer exists (no ghost rows in the report)
-KNOWN_BENCHES = {"serving_pool", "serving_sweep", "serving_long_prompt"}
+KNOWN_BENCHES = {"serving_pool", "serving_sweep", "serving_long_prompt",
+                 "serving_cow"}
 
 
 def _pct(sorted_ms, q):
@@ -295,11 +304,111 @@ def run_long_prompt(policies=LONG_PROMPT_POLICIES,
     return rows
 
 
+def _drive_cow(model, *, policy, best_of, speculate_k, prompt_len,
+               n_groups, max_new, seed, max_seq, repeats=2):
+    """Best-of-N fork workload, CoW+speculative engine vs the
+    independent-submit baseline (cow=False, no speculation): same
+    prompts, greedy outputs asserted token-identical, page allocation
+    measured as per-pass ``reused_total`` deltas so the scratch rows and
+    prefix-cache donations cancel out.  One engine pass serves every
+    metric in the row — the page accounting, the acceptance rate and the
+    tokens/dispatch all come from the same (best) pass."""
+    rs = np.random.RandomState(seed)
+    prompts = [list(rs.randint(1, 500, prompt_len).astype(int))
+               for _ in range(n_groups)]
+
+    def _pass(eng):
+        a0 = eng.pool.reused_total
+        dd0 = eng.dev.decode_dispatches
+        st0 = eng.stats()
+        t0 = time.perf_counter()
+        groups = [eng.fork_submit(p, best_of, max_new_tokens=max_new)
+                  for p in prompts]
+        eng.run_until_done()
+        dt = time.perf_counter() - t0
+        eng.drain()
+        st1 = eng.stats()
+        d = {k: st1[k] - st0[k] for k in
+             ("steps", "cow_copies", "spec_drafted", "spec_accepted",
+              "tokens_emitted")}
+        d["decode_dispatches"] = eng.dev.decode_dispatches - dd0
+        outs = [[list(r.generated) for r in g.branches] for g in groups]
+        return dt, eng.pool.reused_total - a0, outs, d, st1
+
+    base = ServingEngine(model, max_slots=best_of, max_seq=max_seq,
+                         policy=policy, pipeline_depth=3,
+                         extra_pages_per_slot=2, cow=False)
+    _pass(base)  # pass 0: compile warmup + scratch allocation
+    _, base_pages, base_outs, _, _ = _pass(base)
+
+    eng = ServingEngine(model, max_slots=best_of, max_seq=max_seq,
+                        policy=policy, pipeline_depth=3,
+                        extra_pages_per_slot=2, cow=True,
+                        speculate_k=speculate_k)
+    best = None
+    for rep in range(repeats + 1):  # pass 0 = warmup, discarded
+        res = _pass(eng)
+        if rep and (best is None or res[0] < best[0]):
+            best = res
+    dt, cow_pages, outs, d, st = best
+    assert outs == base_outs, \
+        f"CoW/spec outputs diverged from baseline under {policy}"
+
+    return {
+        "bench": "serving_cow",
+        "policy": policy,
+        "best_of": best_of,
+        "speculate_k": speculate_k,
+        "prompt_tokens": prompt_len,
+        "groups": n_groups,
+        "prompt_pages": -(-prompt_len // eng.block),
+        "pages_baseline": base_pages,
+        "pages_cow": cow_pages,
+        # THE tentpole number: total pages the baseline allocates per
+        # page the CoW engine allocates (>= 0.5 * best_of gates CI)
+        "pages_saved_ratio": round(base_pages / max(cow_pages, 1), 3),
+        "cow_copies": d["cow_copies"],
+        "tokens_equal": True,  # asserted above
+        "spec_drafted": d["spec_drafted"],
+        "spec_acceptance": round(
+            d["spec_accepted"] / max(d["spec_drafted"], 1), 4),
+        "tokens_per_dispatch": round(
+            d["tokens_emitted"] / max(d["decode_dispatches"], 1), 3),
+        "dispatches_per_step": st["dispatches_per_step"],
+        "forks_balanced": st["forks_taken"] == st["forks_released"],
+        "steps": d["steps"],
+        "time_s": round(dt, 3),
+        "steps_per_s": round(d["steps"] / max(dt, 1e-9), 2),
+    }
+
+
+def run_cow(policies=COW_POLICIES, best_of: int = 4, speculate_k: int = 4,
+            prompt_len: int = 520, n_groups: int = 2, max_new: int = 8,
+            seed: int = 0, max_seq: int = 2048, write_json: bool = False):
+    """CoW fork + speculative-lane workload: N-way best-of groups over a
+    4-full-blocks-plus-partial prompt (exercises both the shared-ref and
+    the partial-page-copy paths), speculative greedy decode in the same
+    fused step.  The row's pages_saved_ratio / tokens_per_dispatch are
+    the regression-gated numbers."""
+    model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
+    rows = []
+    for policy in policies:
+        rows.append(_drive_cow(
+            model, policy=policy, best_of=best_of,
+            speculate_k=speculate_k, prompt_len=prompt_len,
+            n_groups=n_groups, max_new=max_new, seed=seed,
+            max_seq=max_seq))
+    if write_json:
+        _update_json(cow=rows)
+    return rows
+
+
 def _row_key(row):
     """Identity of a bench row inside a section (merge/prune unit)."""
     return (row.get("bench"), row.get("policy"),
             row.get("pipeline_depth"), row.get("slots"),
-            row.get("mode"), row.get("long_prompt_tokens"))
+            row.get("mode"), row.get("long_prompt_tokens"),
+            row.get("best_of"), row.get("speculate_k"))
 
 
 def _merge_section(old_rows, new_rows):
@@ -318,18 +427,19 @@ def _merge_section(old_rows, new_rows):
     return kept + list(new_rows)
 
 
-def _update_json(policies=None, sweep=None, long_prompt=None) -> None:
+def _update_json(policies=None, sweep=None, long_prompt=None,
+                 cow=None) -> None:
     """Merge-write BENCH_serving.json ({"policies", "sweep",
-    "long_prompt"}), preserving sections this run did not produce and
-    merging rows (by bench/policy/axis key) within the sections it did —
-    with stale rows pruned (see _merge_section).  Migrates the PR 2 era
-    bare-list schema."""
+    "long_prompt", "cow"}), preserving sections this run did not produce
+    and merging rows (by bench/policy/axis key) within the sections it
+    did — with stale rows pruned (see _merge_section).  Migrates the
+    PR 2 era bare-list schema."""
     data = {}
     if BENCH_JSON.exists():
         old = json.loads(BENCH_JSON.read_text())
         data = {"policies": old} if isinstance(old, list) else old
     for name, rows in (("policies", policies), ("sweep", sweep),
-                       ("long_prompt", long_prompt)):
+                       ("long_prompt", long_prompt), ("cow", cow)):
         if rows is not None:
             data[name] = _merge_section(data.get(name), rows)
     BENCH_JSON.write_text(json.dumps(data, indent=1))
@@ -345,6 +455,13 @@ def main() -> None:
                     help="run the long-prompt TTFT workload (chunked vs "
                          "unchunked head-of-line blocking) INSTEAD of "
                          "the default per-policy pass")
+    ap.add_argument("--best-of", type=int, default=0, metavar="N",
+                    help="run the CoW fork + speculative-lane workload "
+                         "with N-way best-of groups INSTEAD of the "
+                         "default per-policy pass")
+    ap.add_argument("--speculate", type=int, default=4, metavar="K",
+                    help="draft K tokens per fused dispatch in the "
+                         "--best-of workload (0 disables the lane)")
     ap.add_argument("--smoke", action="store_true",
                     help="small long-prompt run for CI (stamp-it only, "
                          "shorter prompts); never writes the baseline — "
@@ -368,6 +485,18 @@ def main() -> None:
             slot_counts=SWEEP_SLOTS if "slots" in axes else (4,),
             write_json=write,
         )
+    elif args.best_of:
+        policies = (tuple(args.policies.split(","))
+                    if args.policies else COW_POLICIES)
+        if args.smoke:
+            write = False  # see --smoke help: never pollute the baseline
+            rows = run_cow(policies=("stamp-it",), best_of=args.best_of,
+                           speculate_k=args.speculate, prompt_len=200,
+                           n_groups=1, max_new=4, max_seq=1024,
+                           write_json=False)
+        else:
+            rows = run_cow(policies=policies, best_of=args.best_of,
+                           speculate_k=args.speculate, write_json=write)
     elif args.long_prompt:
         policies = (tuple(args.policies.split(","))
                     if args.policies else LONG_PROMPT_POLICIES)

@@ -3,8 +3,12 @@ continuous-batching engine — paged KV cache, prefix cache, and pluggable
 page reclamation under asynchronous dispatch.  Any of the paper's seven
 schemes (plus the native analogues) is selectable via ``--policy``; with
 ``--temperature`` the fused decode step samples on device.
+``--best-of N`` forks every prompt into N copy-on-write branches that
+share its prompt pages; ``--speculate K`` drafts K tokens per fused
+dispatch with the truncated-model speculative lane (greedy only).
 
     PYTHONPATH=src python examples/serve_paged.py --policy hazard
+    PYTHONPATH=src python examples/serve_paged.py --best-of 4 --speculate 2
 """
 
 import argparse
@@ -32,17 +36,28 @@ def main() -> None:
                          "prefill inside the fused step, one compiled "
                          "chunk shape, bounded TTFT); 0 = legacy "
                          "whole-prompt prefill dispatch")
+    ap.add_argument("--best-of", type=int, default=1,
+                    help="fork each prompt into N copy-on-write branches "
+                         "sharing its prompt pages (one prefill per "
+                         "group; losers retire as one batch)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="draft K tokens per fused dispatch via the "
+                         "speculative lane (greedy decoding only)")
     args = ap.parse_args()
+    if args.speculate and args.temperature != 0.0:
+        ap.error("--speculate requires greedy decoding (--temperature 0)")
 
     model = Model(smoke_config(ARCHS["granite-3-8b"]))
     eng = ServingEngine(
-        model, max_slots=3, max_seq=512, policy=args.policy,
-        pipeline_depth=3, prefix_cache_entries=16, extra_pages_per_slot=4,
-        temperature=args.temperature, top_p=args.top_p,
-        chunk_tokens=args.chunk_tokens,
+        model, max_slots=max(3, args.best_of), max_seq=512,
+        policy=args.policy, pipeline_depth=3, prefix_cache_entries=16,
+        extra_pages_per_slot=4, temperature=args.temperature,
+        top_p=args.top_p, chunk_tokens=args.chunk_tokens,
+        speculate_k=args.speculate,
     )
     rs = np.random.RandomState(0)
     shared_prefix = list(rs.randint(1, 500, 128).astype(int))
+    groups = []
     for i in range(args.requests):
         # half the requests share a 128-token prefix (prefix-cache hits)
         if i % 2 == 0:
@@ -50,7 +65,11 @@ def main() -> None:
                 rs.randint(1, 500, rs.randint(5, 60)).astype(int))
         else:
             prompt = list(rs.randint(1, 500, rs.randint(50, 250)).astype(int))
-        eng.submit(prompt, max_new_tokens=args.max_new)
+        if args.best_of > 1:
+            groups.append(eng.fork_submit(prompt, args.best_of,
+                                          max_new_tokens=args.max_new))
+        else:
+            eng.submit(prompt, max_new_tokens=args.max_new)
 
     t0 = time.perf_counter()
     done = eng.run_until_done()
@@ -71,6 +90,13 @@ def main() -> None:
           f"{s['prefix_hits']}/{s['prefix_misses']}  "
           f"pages recycled: {s['pool_freed']}  "
           f"unreclaimed after drain: {s['pool_unreclaimed']}")
+    if args.best_of > 1 or args.speculate:
+        print(f"cow/spec: groups={len(groups)}  "
+              f"fork refs taken/released: "
+              f"{s['forks_taken']}/{s['forks_released']}  "
+              f"partial-page copies: {s['cow_copies']}  "
+              f"spec acceptance: {s['spec_acceptance']:.2f}  "
+              f"tokens/dispatch: {s['tokens_per_dispatch']:.2f}")
 
 
 if __name__ == "__main__":

@@ -42,7 +42,7 @@ import jax
 
 from ..memory.block_pool import ShardedPoolSet
 from ..serving.engine import ServingEngine
-from ..serving.scheduler import Request
+from ..serving.scheduler import ForkGroup, Request
 from .journal import RequestJournal
 from .ledger import ClusterHold, ClusterLedger
 from .router import Router, make_router
@@ -66,6 +66,9 @@ class ReplicaGroup:
         temperature: float = 0.0,
         top_p: float = 1.0,
         sample_seed: int = 0,
+        cow: bool = True,
+        speculate_k: int = 0,
+        draft_layers: Optional[int] = None,
     ) -> None:
         if n_replicas < 1:
             raise ValueError("need at least one replica")
@@ -92,6 +95,9 @@ class ReplicaGroup:
             seed=seed,
             temperature=temperature,
             top_p=top_p,
+            cow=cow,
+            speculate_k=speculate_k,
+            draft_layers=draft_layers,
         )
         # chunked prefill: None = the engine default (chunked, one
         # BLOCK_SIZE chunk per fused step); 0 = legacy whole-prompt
@@ -145,6 +151,27 @@ class ReplicaGroup:
         self.route_trace.append((len(self.requests), r))
         self.requests.append(req)
         return req
+
+    def fork_submit(self, prompt: Sequence[int], n: int,
+                    max_new_tokens: int = 16,
+                    eos_id: Optional[int] = None,
+                    suffixes: Optional[Sequence[Sequence[int]]] = None,
+                    ) -> ForkGroup:
+        """Best-of-N submission: ALL branches route to ONE replica —
+        CoW page sharing is an intra-shard mechanism (a branch's block
+        table points into the parent's pages of the SAME device pool),
+        so a fork group never spans replicas.  The router picks once
+        for the whole group; with CoW the group's page charge is ~one
+        prompt, which is exactly what ``pending_pages`` reports to the
+        least-loaded router."""
+        r = self.router.pick(self, prompt)
+        group = self.engines[r].fork_submit(
+            prompt, n, max_new_tokens, eos_id, suffixes
+        )
+        for req in group.branches:
+            self.route_trace.append((len(self.requests), r))
+            self.requests.append(req)
+        return group
 
     def submit_replay(self, prompt: Sequence[int], max_new_tokens: int,
                       eos_id: Optional[int] = None) -> Request:

@@ -94,18 +94,22 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
 
 def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
                     n_kv: Optional[int] = None,
+                    global_pages: bool = False,
                     impl: Optional[str] = None):
     """``n_kv`` statically bounds the KV-page sweep (see the Pallas
-    kernel's docstring); ``None`` sweeps the full table width."""
+    kernel's docstring); ``None`` sweeps the full table width.
+    ``global_pages`` switches table entries to slot-flattened GLOBAL page
+    ids (``slot * N_pool + page``) so rows may reference pages owned by
+    other slots — the copy-on-write fork substrate."""
     mode = _impl(impl)
     if mode == "ref":
         return ref.paged_attention(q, k_pool, v_pool, block_table, lengths,
-                                   n_kv=n_kv)
+                                   n_kv=n_kv, global_pages=global_pages)
     from .paged_attention import paged_attention_pallas
 
     return paged_attention_pallas(
         q, k_pool, v_pool, block_table, lengths, n_kv=n_kv,
-        interpret=(mode == "interpret"),
+        global_pages=global_pages, interpret=(mode == "interpret"),
     )
 
 

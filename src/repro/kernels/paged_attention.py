@@ -133,6 +133,7 @@ def paged_attention_pallas(
     lengths: jax.Array,      # (B,) int32
     *,
     n_kv: int | None = None,
+    global_pages: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """``n_kv`` (static) bounds the KV sweep: the grid iterates only the
@@ -140,7 +141,13 @@ def paged_attention_pallas(
     pass a bucketed bound >= ceil(max(lengths)/block); positions past a
     sequence's length are masked to NEG_INF either way, so any valid bound
     is bit-identical to the full sweep — it just skips pages no active
-    sequence can reach."""
+    sequence can reach.
+
+    ``global_pages``: table entries are GLOBAL ids ``slot * N_pool + page``
+    into the slot-flattened pool, so a row may stream pages owned by
+    another slot (copy-on-write prefix forks).  Same grid, same scratch;
+    only the k/v index maps change (page id selects the flattened leading
+    axis directly instead of (slot, page))."""
     if n_kv is not None and n_kv < block_table.shape[1]:
         block_table = block_table[:, :n_kv]
     B, H, D = q.shape
@@ -151,7 +158,23 @@ def paged_attention_pallas(
     qg = q.reshape(B, Hkv, G, D)
 
     kernel = functools.partial(_paged_kernel, scale=scale,
-                               block_k=block, n_kv=max_blocks)
+                               block_k=block, n_kv=max_blocks,
+                               flat_pool=global_pages)
+    if global_pages:
+        k_op = k_pool.reshape(B * n_pool, block, Hkv, D)
+        v_op = v_pool.reshape(B * n_pool, block, Hkv, D)
+        kv_spec = pl.BlockSpec(
+            (1, block, 1, D),
+            lambda b, h, ik, table, lens: (table[b, ik], 0, h, 0),
+        )
+        kv_specs = [kv_spec, kv_spec]
+    else:
+        k_op, v_op = k_pool, v_pool
+        kv_spec = pl.BlockSpec(
+            (1, 1, block, 1, D),
+            lambda b, h, ik, table, lens: (b, table[b, ik], 0, h, 0),
+        )
+        kv_specs = [kv_spec, kv_spec]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -161,18 +184,7 @@ def paged_attention_pallas(
                 pl.BlockSpec((1, 1, G, D),
                              lambda b, h, ik, *_: (b, h, 0, 0)),
                 # page id comes from the prefetched block table
-                pl.BlockSpec(
-                    (1, 1, block, 1, D),
-                    lambda b, h, ik, table, lens: (
-                        b, table[b, ik], 0, h, 0
-                    ),
-                ),
-                pl.BlockSpec(
-                    (1, 1, block, 1, D),
-                    lambda b, h, ik, table, lens: (
-                        b, table[b, ik], 0, h, 0
-                    ),
-                ),
+                *kv_specs,
             ],
             out_specs=pl.BlockSpec((1, 1, G, D),
                                    lambda b, h, ik, *_: (b, h, 0, 0)),
@@ -187,13 +199,14 @@ def paged_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(block_table, lengths, qg, k_pool, v_pool)
+    )(block_table, lengths, qg, k_op, v_op)
     return out.reshape(B, H, D)
 
 
 def _paged_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
                   acc_ref, m_ref, l_ref, *,
-                  scale: float, block_k: int, n_kv: int):
+                  scale: float, block_k: int, n_kv: int,
+                  flat_pool: bool = False):
     b = pl.program_id(0)
     ik = pl.program_id(2)
 
@@ -204,8 +217,12 @@ def _paged_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0, 0]            # (G, D)
-    k = k_ref[0, 0, :, 0, :]   # (block, D)
-    v = v_ref[0, 0, :, 0, :]
+    if flat_pool:              # global ids: pool pre-flattened to 4D
+        k = k_ref[0, :, 0, :]  # (block, D)
+        v = v_ref[0, :, 0, :]
+    else:
+        k = k_ref[0, 0, :, 0, :]
+        v = v_ref[0, 0, :, 0, :]
 
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),

@@ -157,6 +157,7 @@ def paged_attention(
     lengths: jax.Array,      # (B,) int32
     *,
     n_kv: Optional[int] = None,
+    global_pages: bool = False,
 ) -> jax.Array:
     """Oracle: gather the pages then run decode attention.
 
@@ -165,6 +166,11 @@ def paged_attention(
     DESIGN.md), so the gather never crosses shards.  The Pallas kernel
     streams pages HBM->VMEM without materializing the gathered cache;
     numerics are identical.
+
+    ``global_pages`` flattens the slot axis away: table entries are then
+    GLOBAL ids ``slot * N_blocks + page`` and a row may reference pages
+    owned by *another* slot — the copy-on-write fork substrate (a forked
+    prefix is one physical set of pages referenced by N block-table rows).
 
     ``n_kv`` (static) bounds the sweep to the first ``n_kv`` table columns;
     past-length positions mask to exp-underflow zero either way, so any
@@ -176,9 +182,16 @@ def paged_attention(
     block = k_pool.shape[2]
     Hkv = k_pool.shape[3]
     max_blocks = block_table.shape[1]
-    idx = block_table[:, :, None, None, None]
-    k = jnp.take_along_axis(k_pool, idx, axis=1)  # (B, MB, block, Hkv, D)
-    v = jnp.take_along_axis(v_pool, idx, axis=1)
+    if global_pages:
+        n_pool = k_pool.shape[1]
+        kfl = k_pool.reshape(B * n_pool, block, Hkv, D)
+        vfl = v_pool.reshape(B * n_pool, block, Hkv, D)
+        k = jnp.take(kfl, block_table, axis=0)  # (B, MB, block, Hkv, D)
+        v = jnp.take(vfl, block_table, axis=0)
+    else:
+        idx = block_table[:, :, None, None, None]
+        k = jnp.take_along_axis(k_pool, idx, axis=1)
+        v = jnp.take_along_axis(v_pool, idx, axis=1)
     k = k.reshape(B, max_blocks * block, Hkv, D)
     v = v.reshape(B, max_blocks * block, Hkv, D)
     return decode_attention(q, k, v, lengths)

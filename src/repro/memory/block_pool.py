@@ -118,6 +118,8 @@ class BlockPool:
         ]
         self.freed_total = 0
         self.reused_total = 0
+        self.forks_taken = 0
+        self.forks_released = 0
         self.policy.bind(self)
         if shard_set is not None:
             shard_set.register(self)
@@ -177,6 +179,27 @@ class BlockPool:
         bookkeeping event for the whole batch (chunk-batched stamping;
         see ReclamationPolicy.retire_many)."""
         self.policy.retire_many(refs)
+
+    # ------------------------------------------------------------------
+    # copy-on-write fork references
+    # ------------------------------------------------------------------
+    def fork_refs(self, refs: Sequence[tuple]) -> None:
+        """A CoW branch now shares these pages: take one fork reference
+        each.  A forked page retired by its owner stays out of the free
+        list until the LAST branch releases it (then the whole deferred
+        set retires as one policy batch)."""
+        self.policy.fork_refs(refs)
+        self.forks_taken += len(list(refs))
+
+    def release_fork(self, refs: Sequence[tuple]) -> None:
+        """A branch is done with these shared pages (finished or killed)."""
+        refs = list(refs)
+        self.policy.release_fork(refs)
+        self.forks_released += len(refs)
+
+    def fork_count(self, ref: tuple) -> int:
+        """Live fork references on one (slot, page) — observability."""
+        return self.policy.fork_count(ref)
 
     def reclaim(self) -> None:
         """Best-effort maintenance (drain / teardown), not the hot path."""

@@ -140,6 +140,16 @@ class ReclamationPolicy:
         self.holds_issued = 0
         self.holds_open = 0
         self.force_released = 0
+        # copy-on-write fork references: a forked page is shared by N
+        # branches; it must not enter the scheme's retire path until the
+        # LAST branch releases it.  Generic implementation: a count table
+        # plus a parked set for pages retired while forked (native
+        # overrides: RefcountPolicy maps forks onto its per-page
+        # counters, the LFRC adapter onto long-lived guards).
+        self._fork: Dict[PageRef, int] = {}
+        self._fork_parked: Set[PageRef] = set()
+        self.forks_taken = 0
+        self.forks_released = 0
 
     def bind(self, pool) -> None:
         # a policy routes reclaimed pages to ONE pool's free lists;
@@ -159,14 +169,96 @@ class ReclamationPolicy:
     def complete_step(self, handle: int) -> None:
         raise NotImplementedError
 
+    # -- copy-on-write fork references ----------------------------------
+    def fork_refs(self, refs: Sequence[PageRef]) -> None:
+        """Take one fork reference per page (a CoW branch now shares it).
+
+        Cold path (branch admission), O(#refs) with no per-step cost:
+        the fork table is only consulted again when one of these pages
+        is retired.  Counts nest — N branches over the same prefix take
+        N-1 references per shared page."""
+        refs = list(refs)
+        if not refs:
+            return
+        with self._hold_lock:
+            for ref in refs:
+                self._fork[ref] = self._fork.get(ref, 0) + 1
+        self.forks_taken += len(refs)
+        self._note_fork(len(refs))
+
+    def _note_fork(self, n: int) -> None:
+        """Hook: stamp-it stamps the fork event in its ledger (O(1))."""
+
+    def release_fork(self, refs: Sequence[PageRef]) -> None:
+        """Drop one fork reference per page (a branch finished or was
+        killed).  Pages whose count hits zero AND were retired while
+        forked enter the scheme's retire path now, as ONE batch —
+        for stamp-it a single stamped ring append."""
+        refs = list(refs)
+        if not refs:
+            return
+        newly_free: List[PageRef] = []
+        with self._hold_lock:
+            for ref in refs:
+                c = self._fork.get(ref, 0)
+                if c <= 0:
+                    raise AssertionError(
+                        f"release_fork without matching fork_refs: {ref}"
+                    )
+                if c == 1:
+                    del self._fork[ref]
+                    if ref in self._fork_parked:
+                        self._fork_parked.discard(ref)
+                        newly_free.append(ref)
+                else:
+                    self._fork[ref] = c - 1
+        self.forks_released += len(refs)
+        if newly_free:
+            self.retire_many(newly_free)
+
+    def fork_count(self, ref: PageRef) -> int:
+        with self._hold_lock:
+            return self._fork.get(ref, 0)
+
+    def _clear_forks(self) -> List[PageRef]:
+        """Drop every fork reference (dead-replica quiesce); returns the
+        parked refs that must now retire.  Native overrides clear their
+        own structures and free directly."""
+        with self._hold_lock:
+            self._fork.clear()
+            parked = list(self._fork_parked)
+            self._fork_parked.clear()
+        return parked
+
+    def _intercept_forked(
+        self, refs: Sequence[PageRef]
+    ) -> List[PageRef]:
+        """Park retired-while-forked refs; return the passthrough rest."""
+        with self._hold_lock:
+            if not self._fork:
+                return list(refs)
+            passthrough = []
+            for ref in refs:
+                if self._fork.get(ref, 0) > 0:
+                    self._fork_parked.add(ref)
+                else:
+                    passthrough.append(ref)
+            return passthrough
+
     # -- retire / reclaim ----------------------------------------------
     def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
         """Retire; while any buffered hold is open, pages park in the
         hold buffer and only enter the scheme's own retire path once the
-        last hold releases (local in-flight rules still apply after)."""
+        last hold releases (local in-flight rules still apply after).
+        Fork-held pages park in the fork table FIRST — a page shared by
+        a live CoW branch never reaches the scheme (or the hold buffer)
+        until its last fork releases."""
+        refs = self._intercept_forked([(slot, p) for p in pages])
+        if not refs:
+            return
+        pages = [p for _, p in refs]
         with self._hold_lock:
             if self._open_holds:
-                pages = list(pages)
                 self._held.append((slot, pages))
                 self._held_pages += len(pages)
                 return
@@ -180,7 +272,7 @@ class ReclamationPolicy:
         migration drops) so per-chunk page churn stays amortized O(1)
         under the stamp ledger instead of one bookkeeping event per
         page."""
-        refs = list(refs)
+        refs = self._intercept_forked(list(refs))
         if not refs:
             return
         with self._hold_lock:
@@ -271,6 +363,11 @@ class ReclamationPolicy:
             if not h.released:
                 self.force_release(h)
                 holds += 1
+        # forked branches of a dead replica will never release: drop all
+        # fork references and retire whatever they parked (one batch)
+        parked = self._clear_forks()
+        if parked:
+            self.retire_many(parked)
         steps = self._abandon_steps()
         self.reclaim()
         return {"holds": holds, "steps": steps}
@@ -283,7 +380,7 @@ class ReclamationPolicy:
     # -- observability --------------------------------------------------
     def unreclaimed(self) -> int:
         with self._hold_lock:
-            held = self._held_pages
+            held = self._held_pages + len(self._fork_parked)
         return held + self._unreclaimed()
 
     def _unreclaimed(self) -> int:
@@ -355,6 +452,12 @@ class StampItPolicy(ReclamationPolicy):
 
     def reclaim(self) -> None:
         self.ledger.reclaim()
+
+    def _note_fork(self, n: int) -> None:
+        # the whole fork batch is ONE stamped point event in the ledger —
+        # no per-page counter traffic, the paper's O(1) bookkeeping story
+        # carried over to CoW branch admission
+        self.ledger.note_event("fork")
 
     def hold(self, tag: str = "hold") -> PolicyHold:
         h = _StampHold(self, tag)
@@ -521,6 +624,7 @@ class RefcountPolicy(ReclamationPolicy):
         self._next = 1
         self._inflight: Dict[int, Set[PageRef]] = {}
         self._rc: Dict[PageRef, int] = {}
+        self._fork_rc: Dict[PageRef, int] = {}  # fork share of _rc
         self._pending: Set[PageRef] = set()
 
     def begin_step(self, page_refs: Sequence[PageRef]) -> int:
@@ -557,6 +661,59 @@ class RefcountPolicy(ReclamationPolicy):
                     self._pending.add(ref)
         for slot, p in free:
             self.release(slot, p)
+
+    # -- native fork path: a fork IS a refcount here ----------------------
+    # (base `_fork` stays empty, so the generic retire interception is a
+    # no-op and forked retires park in `_pending` like any pinned page)
+    def fork_refs(self, refs: Sequence[PageRef]) -> None:
+        refs = list(refs)
+        with self._lock:
+            for ref in refs:
+                self._rc[ref] = self._rc.get(ref, 0) + 1
+                self._fork_rc[ref] = self._fork_rc.get(ref, 0) + 1
+        self.forks_taken += len(refs)
+
+    def release_fork(self, refs: Sequence[PageRef]) -> None:
+        free = []
+        refs = list(refs)
+        with self._lock:
+            for ref in refs:
+                assert self._fork_rc.get(ref, 0) > 0, (
+                    f"release_fork without matching fork_refs: {ref}"
+                )
+                self._fork_rc[ref] -= 1
+                if self._fork_rc[ref] == 0:
+                    del self._fork_rc[ref]
+                self._rc[ref] -= 1
+                if self._rc[ref] == 0:
+                    del self._rc[ref]
+                    if ref in self._pending:
+                        self._pending.discard(ref)
+                        free.append(ref)
+        self.forks_released += len(refs)
+        for slot, p in free:
+            self.release(slot, p)
+
+    def fork_count(self, ref: PageRef) -> int:
+        with self._lock:
+            return self._fork_rc.get(ref, 0)
+
+    def _clear_forks(self) -> List[PageRef]:
+        free = []
+        with self._lock:
+            for ref, n in self._fork_rc.items():
+                c = self._rc.get(ref, 0) - n
+                if c <= 0:
+                    self._rc.pop(ref, None)
+                    if ref in self._pending:
+                        self._pending.discard(ref)
+                        free.append(ref)
+                else:
+                    self._rc[ref] = c
+            self._fork_rc.clear()
+        for slot, p in free:
+            self.release(slot, p)
+        return []
 
     def _abandon_steps(self) -> int:
         # reap dead steps through the normal completion path: their
@@ -634,6 +791,16 @@ class CoreSchemeAdapter(ReclamationPolicy):
         self._use_guards = not reclaimer.protect_implies_safe
         self.retired_pages = 0
         self.released_pages = 0
+        # LFRC-native CoW forks: one long-lived paper-thread whose guards
+        # ARE the fork references (each guard acquisition is a Valois
+        # rc increment on the page node; the last reset drops rc to 0 and
+        # the scheme frees through the node finalizer).  Other guarded
+        # schemes (hazard) cannot hold per-branch long-lived protections
+        # without pinning a slot per page forever, and region schemes
+        # would pin EVERY page retired meanwhile — both use the generic
+        # fork park-table instead.
+        self._fork_guards: Dict[PageRef, List[Guard]] = {}
+        self._fork_rec = None
 
     # -- page cells -----------------------------------------------------
     def _cell_for(self, ref: PageRef) -> Tuple[_PageNode, AtomicMarkedRef]:
@@ -685,6 +852,80 @@ class CoreSchemeAdapter(ReclamationPolicy):
             # single-issuer maintenance point: the scheme reclaims what
             # its own rules now allow (epoch advance, hazard scan, ...)
             self.reclaimer.flush()
+
+    # -- copy-on-write forks --------------------------------------------
+    @property
+    def _native_fork(self) -> bool:
+        return getattr(self.reclaimer, "name", "") == "lfrc"
+
+    def fork_refs(self, refs: Sequence[PageRef]) -> None:
+        if not self._native_fork:
+            return super().fork_refs(refs)
+        refs = list(refs)
+        if not refs:
+            return
+        with self._lock:
+            if self._fork_rec is None:
+                rec = self.reclaimer._acquire_record()
+                rec.region_depth = 1
+                self.reclaimer._enter_region(rec)
+                self._fork_rec = rec
+            for ref in refs:
+                _, cell = self._cell_for(ref)
+                g = Guard(self.reclaimer, self._fork_rec)
+                g.acquire(cell)  # LFRC: Valois safe-read, rc += 1
+                assert g.get() is not None, (
+                    f"fork_refs on a retired page: {ref}"
+                )
+                self._fork_guards.setdefault(ref, []).append(g)
+        self.forks_taken += len(refs)
+
+    def release_fork(self, refs: Sequence[PageRef]) -> None:
+        if not self._native_fork:
+            return super().release_fork(refs)
+        refs = list(refs)
+        if not refs:
+            return
+        with self._lock:
+            for ref in refs:
+                guards = self._fork_guards.get(ref)
+                assert guards, (
+                    f"release_fork without matching fork_refs: {ref}"
+                )
+                guards.pop().reset()  # rc -= 1; frees at 0 if retired
+                if not guards:
+                    del self._fork_guards[ref]
+            if not self._fork_guards and self._fork_rec is not None:
+                rec, self._fork_rec = self._fork_rec, None
+                rec.region_depth = 0
+                self.reclaimer._leave_region(rec)
+                self.reclaimer._on_thread_detach(rec)
+                rec.in_use.store(0)
+            self.reclaimer.flush()
+        self.forks_released += len(refs)
+
+    def fork_count(self, ref: PageRef) -> int:
+        if not self._native_fork:
+            return super().fork_count(ref)
+        with self._lock:
+            return len(self._fork_guards.get(ref, ()))
+
+    def _clear_forks(self) -> List[PageRef]:
+        if not self._native_fork:
+            return super()._clear_forks()
+        with self._lock:
+            for guards in self._fork_guards.values():
+                for g in guards:
+                    g.reset()
+            self._fork_guards.clear()
+            if self._fork_rec is not None:
+                rec, self._fork_rec = self._fork_rec, None
+                rec.region_depth = 0
+                self.reclaimer._leave_region(rec)
+                self.reclaimer._on_thread_detach(rec)
+                rec.in_use.store(0)
+            self.reclaimer.flush()
+        return []
 
     # -- retire / reclaim ----------------------------------------------
     def _retire(self, slot: int, pages: Sequence[int]) -> None:

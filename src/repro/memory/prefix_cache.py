@@ -61,6 +61,10 @@ class PrefixCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # evictions of pages a CoW fork branch still references: the
+        # retire is DEFERRED by the policy's fork park-table until the
+        # last branch releases (then the whole set retires as one batch)
+        self.evicted_while_forked = 0
 
     def __len__(self) -> int:
         return len(self._map)
@@ -136,6 +140,8 @@ class PrefixCache:
                 if e is None or e.pins > 0:
                     continue
                 del self._map[key]
+                if self.pool.fork_count((e.slot, e.page)):
+                    self.evicted_while_forked += 1
                 refs.append((e.slot, e.page))
                 self.evictions += 1
                 removed += 1
@@ -161,6 +167,10 @@ class PrefixCache:
         for key, e in self._map.items():  # FIFO order
             if e.pins == 0:
                 del self._map[key]
+                # evict-while-forked is SAFE, not an error: the policy
+                # parks the retire until the last fork ref releases
+                if self.pool.fork_count((e.slot, e.page)):
+                    self.evicted_while_forked += 1
                 self.pool.free(e.slot, [e.page])  # retire via policy
                 self.evictions += 1
                 return True

@@ -46,6 +46,10 @@ class StampLedger:
         self.retired_total = 0
         self.reclaimed_total = 0
         self.scan_steps = 0
+        # stamped point events (e.g. CoW forks): tag -> count.  An event
+        # is NOT a critical region — it borrows the current highest stamp
+        # as its timestamp and never blocks reclamation.
+        self.events: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     # stamps
@@ -68,6 +72,15 @@ class StampLedger:
 
     def highest_stamp(self) -> int:
         with self._lock:
+            return self._next - 1
+
+    def note_event(self, tag: str) -> int:
+        """Stamp a point event (a CoW fork, a branch kill): the event is
+        tagged with the current highest stamp — a single O(1) ledger
+        operation, the stamp-it answer to per-page refcount traffic —
+        and counted under ``tag``.  Returns the stamp."""
+        with self._lock:
+            self.events[tag] = self.events.get(tag, 0) + 1
             return self._next - 1
 
     def _lowest_active_locked(self) -> int:

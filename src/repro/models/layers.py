@@ -159,6 +159,7 @@ def attention_decode(
     *,
     block_table: Optional[jax.Array] = None,  # (B, max_blocks) for paged
     n_kv: Optional[int] = None,  # static bound on the paged KV sweep
+    global_pages: bool = False,  # table holds slot-flattened global ids
     use_rope: bool = True,
     cross: bool = False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
@@ -167,6 +168,10 @@ def attention_decode(
     Cross-attention decode reads a fixed cache and writes nothing.
     ``n_kv`` bounds the paged-attention page sweep (local path only; the
     context-parallel distributed path always sweeps its stripe).
+    ``global_pages`` switches the paged path to slot-flattened GLOBAL page
+    ids (``slot * N_pool + page``): a block-table row may then reference
+    pages physically owned by another slot — how copy-on-write forks share
+    one prompt prefix across N branches.
     """
     B, S1, M = x.shape
     assert S1 == 1
@@ -197,27 +202,55 @@ def attention_decode(
         hkv = cfg.num_kv_heads or cfg.num_heads
         if dist is not None and hkv % 16 != 0:
             # §Perf iteration 2: context-parallel flash-decode over the
-            # page-striped pool (no pool all-gathers)
+            # page-striped pool (no pool all-gathers).  The striped kernel
+            # addresses (slot, page) pairs, so cross-slot CoW refs are not
+            # representable: global ids fold back to local — correct only
+            # while every row references its own slot's pages (the engine
+            # keeps forking off when page striping is active).
             from ..kernels.distributed import paged_attention_dist
 
+            n_pool = cache["k_pool"].shape[1]
+            dist_table = (block_table % n_pool if global_pages
+                          else block_table)
             out, k_pool, v_pool = paged_attention_dist(
-                q1, cache["k_pool"], cache["v_pool"], block_table,
+                q1, cache["k_pool"], cache["v_pool"], dist_table,
                 lengths, k1, v1, mesh=dist["mesh"],
                 batch_part=dist["batch_part"], axis=dist["axis"],
             )
             out = jnp.einsum("bhd,hdm->bm", out, p["wo"].astype(dt))
             return out[:, None], dict(cache, k_pool=k_pool, v_pool=v_pool)
-        # ---- paged cache (per-sequence-local pools) ----
         block = cache["k_pool"].shape[2]
         barange = jnp.arange(B)
-        page = block_table[barange, lengths // block]  # (B,) local page id
-        slot = lengths % block
-        k_pool = cache["k_pool"].at[barange, page, slot].set(k1)
-        v_pool = cache["v_pool"].at[barange, page, slot].set(v1)
-        out = ops.paged_attention(
-            q1, k_pool, v_pool, block_table, lengths + 1, n_kv=n_kv
-        )
-        new_cache = dict(cache, k_pool=k_pool, v_pool=v_pool)
+        if global_pages:
+            # ---- paged cache, slot-flattened global ids (CoW forks) ----
+            n_pool = cache["k_pool"].shape[1]
+            Hkv, D = cache["k_pool"].shape[3], cache["k_pool"].shape[4]
+            page_g = block_table[barange, lengths // block]  # (B,) global
+            offs = lengths % block
+            kfl = cache["k_pool"].reshape(B * n_pool, block, Hkv, D)
+            vfl = cache["v_pool"].reshape(B * n_pool, block, Hkv, D)
+            # inactive slots' zero rows all land on global page 0 (slot
+            # 0's scratch page) — never read, same contract as the local
+            # path's per-slot scratch page
+            kfl = kfl.at[page_g, offs].set(k1)
+            vfl = vfl.at[page_g, offs].set(v1)
+            k_pool = kfl.reshape(cache["k_pool"].shape)
+            v_pool = vfl.reshape(cache["v_pool"].shape)
+            out = ops.paged_attention(
+                q1, k_pool, v_pool, block_table, lengths + 1, n_kv=n_kv,
+                global_pages=True,
+            )
+            new_cache = dict(cache, k_pool=k_pool, v_pool=v_pool)
+        else:
+            # ---- paged cache (per-sequence-local pools) ----
+            page = block_table[barange, lengths // block]  # (B,) local id
+            slot = lengths % block
+            k_pool = cache["k_pool"].at[barange, page, slot].set(k1)
+            v_pool = cache["v_pool"].at[barange, page, slot].set(v1)
+            out = ops.paged_attention(
+                q1, k_pool, v_pool, block_table, lengths + 1, n_kv=n_kv
+            )
+            new_cache = dict(cache, k_pool=k_pool, v_pool=v_pool)
     elif cfg.sliding_window and cache["k"].shape[1] == cfg.sliding_window:
         # ---- rolling (sliding-window) cache ----
         W = cfg.sliding_window
@@ -260,6 +293,7 @@ def attention_chunk(
     pages: jax.Array,      # (nc,) int32 — pages this chunk writes
     positions: jax.Array,  # (C,) int32 — absolute token positions
     n_kv: int,             # static bound on the prior-KV page sweep
+    global_pages: bool = False,  # row/pages hold slot-flattened global ids
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Chunked-prefill attention against a paged KV cache.
 
@@ -271,6 +305,10 @@ def attention_chunk(
     exact zeros: the output at every valid position is bit-identical to a
     whole-prompt prefill of the same tokens (asserted in
     tests/test_chunked_prefill.py).
+
+    With ``global_pages`` the ``row``/``pages`` operands carry global ids
+    into the slot-flattened pool (``slot`` is then only the scratch-row
+    owner); writes and the row gather address the flat pool directly.
     """
     B, C, M = x.shape
     dt = x.dtype
@@ -280,14 +318,29 @@ def attention_chunk(
     block = cache["k_pool"].shape[2]
     Hkv, D = cache["k_pool"].shape[3], cache["k_pool"].shape[4]
     nc = C // block
-    kp = cache["k_pool"].at[slot, pages].set(
-        k[0].reshape(nc, block, Hkv, D).astype(cache["k_pool"].dtype)
-    )
-    vp = cache["v_pool"].at[slot, pages].set(
-        v[0].reshape(nc, block, Hkv, D).astype(cache["v_pool"].dtype)
-    )
-    gk = kp[slot][row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
-    gv = vp[slot][row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
+    if global_pages:
+        n_slots, n_pool = cache["k_pool"].shape[0], cache["k_pool"].shape[1]
+        kfl = cache["k_pool"].reshape(n_slots * n_pool, block, Hkv, D)
+        vfl = cache["v_pool"].reshape(n_slots * n_pool, block, Hkv, D)
+        kfl = kfl.at[pages].set(
+            k[0].reshape(nc, block, Hkv, D).astype(kfl.dtype)
+        )
+        vfl = vfl.at[pages].set(
+            v[0].reshape(nc, block, Hkv, D).astype(vfl.dtype)
+        )
+        gk = kfl[row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
+        gv = vfl[row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
+        kp = kfl.reshape(cache["k_pool"].shape)
+        vp = vfl.reshape(cache["v_pool"].shape)
+    else:
+        kp = cache["k_pool"].at[slot, pages].set(
+            k[0].reshape(nc, block, Hkv, D).astype(cache["k_pool"].dtype)
+        )
+        vp = cache["v_pool"].at[slot, pages].set(
+            v[0].reshape(nc, block, Hkv, D).astype(cache["v_pool"].dtype)
+        )
+        gk = kp[slot][row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
+        gv = vp[slot][row[:n_kv]].reshape(1, n_kv * block, Hkv, D)
     out = ops.flash_attention(q, gk, gv, causal=True, q_offset=positions[0])
     out = jnp.einsum("bshd,hdm->bsm", out, p["wo"].astype(dt))
     return out, dict(cache, k_pool=kp, v_pool=vp)

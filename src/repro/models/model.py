@@ -134,17 +134,23 @@ class Model:
         return T.forward_prefill(params, batch, self.cfg,
                                  constrain=constrain)
 
-    def prefill_chunk(self, params, cache, batch, *, n_kv=None):
+    def prefill_chunk(self, params, cache, batch, *, n_kv=None,
+                      global_pages=False):
         """One chunk of an incremental prefill against the paged decode
         cache (serving hot path; see :func:`repro.models.transformer.
         prefill_chunk`).  ``n_kv`` (static int) bounds the prior-KV page
         sweep like :meth:`decode_step`."""
-        return T.prefill_chunk(params, cache, batch, self.cfg, n_kv=n_kv)
+        return T.prefill_chunk(params, cache, batch, self.cfg, n_kv=n_kv,
+                               global_pages=global_pages)
 
-    def decode_step(self, params, cache, batch, *, n_kv=None):
+    def decode_step(self, params, cache, batch, *, n_kv=None,
+                    global_pages=False):
         """``n_kv`` (static int) bounds the paged-attention KV sweep to the
-        first ``n_kv`` block-table columns (serving hot path)."""
-        return T.decode_step(params, cache, batch, self.cfg, n_kv=n_kv)
+        first ``n_kv`` block-table columns (serving hot path).
+        ``global_pages`` (static bool) switches block-table entries to
+        slot-flattened global page ids (copy-on-write forks)."""
+        return T.decode_step(params, cache, batch, self.cfg, n_kv=n_kv,
+                             global_pages=global_pages)
 
     # ------------------------------------------------------------------
     # Synthetic batches (smoke tests / examples / data pipeline)

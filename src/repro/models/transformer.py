@@ -502,7 +502,8 @@ def forward_prefill(params, batch, cfg: ModelConfig, *,
 
 
 def prefill_chunk(params, cache, batch, cfg: ModelConfig, *,
-                  n_kv: Optional[int] = None):
+                  n_kv: Optional[int] = None,
+                  global_pages: bool = False):
     """One chunk of an incremental (chunked) prefill for paged layouts.
 
     Processes ``C = tokens.shape[1]`` prompt positions starting at absolute
@@ -538,7 +539,7 @@ def prefill_chunk(params, cache, batch, cfg: ModelConfig, *,
         a_in = L.apply_norm(lp["norm1"], h, cfg)
         a, new_c = L.attention_chunk(
             lp["attn"], a_in, cfg, cl, slot=slot, row=row, pages=pages,
-            positions=positions, n_kv=n_kv)
+            positions=positions, n_kv=n_kv, global_pages=global_pages)
         h = h + a
         m_in = L.apply_norm(lp["norm2"], h, cfg)
         if cfg.family == "moe":
@@ -560,12 +561,15 @@ def prefill_chunk(params, cache, batch, cfg: ModelConfig, *,
 # Decode steps
 # ---------------------------------------------------------------------------
 def decode_step(params, cache, batch, cfg: ModelConfig, *,
-                n_kv: Optional[int] = None):
+                n_kv: Optional[int] = None,
+                global_pages: bool = False):
     """One token for every sequence in the batch against the cache.
 
     ``batch``: {"tokens": (B,1) int32, "lengths": (B,) int32,
                 "block_table": (B, MB) int32 (paged layouts only)}
     ``n_kv`` (static) bounds the paged KV sweep (see kernels/ops.py).
+    ``global_pages``: block-table entries are slot-flattened global page
+    ids (copy-on-write forks; see layers.attention_decode).
     Returns (logits (B, V), new_cache).
     """
     lengths = batch["lengths"]
@@ -580,7 +584,8 @@ def decode_step(params, cache, batch, cfg: ModelConfig, *,
             a, new_self = L.attention_decode(
                 lp["self_attn"], a_in, cfg,
                 {"k_pool": cl["sk"], "v_pool": cl["sv"]}, lengths,
-                block_table=block_table, n_kv=n_kv)
+                block_table=block_table, n_kv=n_kv,
+                global_pages=global_pages)
             h = h + a
             x_in = L.apply_norm(lp["norm_x"], h, cfg)
             xa, _ = L.attention_decode(
@@ -626,7 +631,8 @@ def decode_step(params, cache, batch, cfg: ModelConfig, *,
             a_in = L.apply_norm(shared["norm1"], h, cfg)
             a, new_ac = L.attention_decode(
                 shared["attn"], a_in, cfg, acl, lengths,
-                block_table=block_table, n_kv=n_kv)
+                block_table=block_table, n_kv=n_kv,
+                global_pages=global_pages)
             h = h + a
             m_in = L.apply_norm(shared["norm2"], h, cfg)
             h = h + L.apply_mlp(shared["mlp"], m_in, cfg)
@@ -658,7 +664,8 @@ def decode_step(params, cache, batch, cfg: ModelConfig, *,
             a_in = L.apply_norm(lp["norm1"], h, cfg)
             a, new_c = L.attention_decode(lp["attn"], a_in, cfg, cl,
                                           lengths, block_table=block_table,
-                                          n_kv=n_kv)
+                                          n_kv=n_kv,
+                                          global_pages=global_pages)
             h = h + a
             m_in = L.apply_norm(lp["norm2"], h, cfg)
             if cfg.family == "moe":

@@ -88,6 +88,9 @@ class DeviceState:
         top_p: float = 1.0,
         seed: int = 0,
         chunk_tokens: int = 0,
+        global_pages: bool = False,
+        speculate_k: int = 0,
+        draft_layers: int = 0,
     ) -> None:
         self.model = model
         self.params = params
@@ -97,6 +100,23 @@ class DeviceState:
         self.block = block
         self.temperature = float(temperature)
         self.top_p = float(top_p)
+        # global page ids (gid = slot * n_pool + page): block-table rows
+        # address the slot-flattened pool, so a row may reference pages
+        # OWNED BY OTHER SLOTS — the device substrate of CoW forking
+        self.global_pages = bool(global_pages)
+        # speculative-decode lane: k > 0 folds draft-and-verify into the
+        # SAME fused dispatch (greedy only; the engine asserts).  The
+        # draft model is the first `draft_layers` of the target, sharing
+        # its embedding/unembedding and reading the SAME paged KV; its
+        # own KV writes land in a sliced cache copy that is discarded —
+        # the verify pass rewrites the same positions with identical
+        # values into the real cache.
+        self.speculate_k = int(speculate_k)
+        self.draft_layers = int(draft_layers)
+        assert self.speculate_k < block, (
+            "speculate_k must stay below the page size so device growth "
+            "is at most one page per slot per dispatch"
+        )
         # chunked-prefill lane width (0 = lane disabled / legacy prefill).
         # ONE static shape for the whole engine lifetime: the fused step
         # compiles a with-chunk variant per n_kv bucket, never a new
@@ -191,7 +211,7 @@ class DeviceState:
                 {"tokens": ck_tokens, "start": ck_start, "slot": ck_slot,
                  "row": ck_row, "pages": ck_pages,
                  "last_index": ck_last_index},
-                n_kv=n_kv,
+                n_kv=n_kv, global_pages=self.global_pages,
             )
             if self.temperature > 0.0:
                 rng, sub = jax.random.split(rng)
@@ -219,19 +239,83 @@ class DeviceState:
 
         # 4. device-side page growth: the need mask comes from the
         # DEVICE lengths; the host only supplied per-slot candidates.
+        # The speculative lane writes up to `speculate_k` positions past
+        # `lengths` this dispatch, so the horizon extends by k — still at
+        # most ONE page per slot per dispatch because k < block.
+        look = self.speculate_k
         need = ((mask == 1)
-                & ((lengths // self.block + 1) > pages)
+                & (((lengths + look) // self.block + 1) > pages)
                 & (pages < self.mb))
         pos = jnp.clip(pages, 0, self.mb - 1)
         cur = table[rows, pos]
         table = table.at[rows, pos].set(jnp.where(need, cand_pages, cur))
         pages = pages + need.astype(jnp.int32)
 
+        gp = self.global_pages
+        if self.speculate_k > 0:
+            # 5s. speculative draft-and-verify, ONE dispatch (greedy).
+            # Draft: k sequential early-exit steps over the first
+            # `draft_layers` layers (sliced params + sliced cache copy;
+            # the copy is discarded — verify rewrites identical KV).
+            k = self.speculate_k
+            dl = self.draft_layers
+            dparams = dict(params, layers=jax.tree.map(
+                lambda a: a[:dl], params["layers"]))
+            dcache = dict(cache, layers=jax.tree.map(
+                lambda a: a[:dl], cache["layers"]))
+            d_tok, d_len, drafts = tokens, lengths, []
+            for _ in range(k):
+                d_logits, dcache = self.model.decode_step(
+                    dparams, dcache,
+                    {"tokens": d_tok, "lengths": d_len,
+                     "block_table": table},
+                    n_kv=n_kv, global_pages=gp,
+                )
+                nxt = jnp.argmax(d_logits, axis=-1).astype(jnp.int32)
+                drafts.append(nxt)
+                d_tok = nxt[:, None]
+                d_len = d_len + 1
+            # Verify: k+1 full steps teacher-forcing [t0, d1..dk] into
+            # the REAL cache; v_i is the target model's token for
+            # position lengths+i+1 — bit-identical to what non-
+            # speculative greedy decode would produce there.
+            v_tok, v_len, v_list = tokens, lengths, []
+            for i in range(k + 1):
+                logits, cache = self.model.decode_step(
+                    params, cache,
+                    {"tokens": v_tok, "lengths": v_len,
+                     "block_table": table},
+                    n_kv=n_kv, global_pages=gp,
+                )
+                v_list.append(
+                    jnp.argmax(logits, axis=-1).astype(jnp.int32))
+                if i < k:
+                    v_tok = drafts[i][:, None]
+                    v_len = v_len + 1
+            v = jnp.stack(v_list, axis=1)   # (B, k+1)
+            d = jnp.stack(drafts, axis=1)   # (B, k)
+            # accept the longest prefix of drafts the target agrees with;
+            # counts = accepted + 1 (the verify chain's bonus token).
+            # Slots mid teacher-forcing advance exactly 1 like a plain
+            # step (their "drafts" are junk — the forced token overrides).
+            acc = jnp.cumprod((d == v[:, :k]).astype(jnp.int32), axis=1)
+            spec_m = (mask == 1) & (tf_m == 0)
+            counts = jnp.where(spec_m, acc.sum(axis=1) + 1, 1)
+            new_tokens = jnp.take_along_axis(
+                v, counts[:, None] - 1, axis=1)[:, 0]
+            # rejected drafts' KV (positions lengths+counts..lengths+k)
+            # stays garbage but is never attended: lengths advance by
+            # counts, and later steps overwrite those offsets before any
+            # window reaches them.
+            return (new_tokens[:, None], cache, lengths + counts * mask,
+                    table, mask, pages, first_buf, rng, chunk_first,
+                    v, counts * mask)
+
         # 5. decode
         logits, cache = self.model.decode_step(
             params, cache,
             {"tokens": tokens, "lengths": lengths, "block_table": table},
-            n_kv=n_kv,
+            n_kv=n_kv, global_pages=gp,
         )
 
         # 6. sample (greedy is the statically-compiled temperature=0 path)
@@ -477,8 +561,7 @@ class DeviceState:
             ck_last_index = np.int32(c_last_index)
         self.stage_ns += time.perf_counter_ns() - t0
 
-        (self.tokens, self.cache, self.lengths, self.table, self.mask,
-         self.pages, self.first_buf, self.rng, chunk_first) = self._step(
+        out = self._step(
             self.params, self.cache, self.tokens, self.lengths, self.table,
             self.mask, self.pages, self.first_buf, self.rng, reset_m,
             admit_m, admit_len, admit_row, admit_pages, admit_tok,
@@ -486,8 +569,17 @@ class DeviceState:
             ck_slot, ck_start, ck_row, ck_pages, ck_last, ck_last_index,
             n_kv, has_chunk,
         )
+        spec = None
+        if self.speculate_k > 0:
+            (self.tokens, self.cache, self.lengths, self.table, self.mask,
+             self.pages, self.first_buf, self.rng, chunk_first, v,
+             counts) = out
+            spec = (v, counts)
+        else:
+            (self.tokens, self.cache, self.lengths, self.table, self.mask,
+             self.pages, self.first_buf, self.rng, chunk_first) = out
         self._pending_resets.clear()
         self._pending_admits.clear()
         self._pending_chunk = None
         self.decode_dispatches += 1
-        return self.tokens, chunk_first
+        return self.tokens, chunk_first, spec

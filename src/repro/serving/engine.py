@@ -41,7 +41,7 @@ from ..memory.prefix_cache import PrefixCache, block_key, prefix_block_keys
 from ..models import Model
 from ..models.transformer import BLOCK_SIZE, cache_layout
 from .device_state import DeviceState
-from .scheduler import Request, Scheduler
+from .scheduler import ForkGroup, Request, Scheduler
 
 
 def _pow2_bucket(n: int) -> int:
@@ -69,6 +69,9 @@ class ServingEngine:
         params: Any = None,
         shard_set: Optional[ShardedPoolSet] = None,
         journal: Any = None,
+        cow: bool = True,
+        speculate_k: int = 0,
+        draft_layers: Optional[int] = None,
     ) -> None:
         cfg = model.cfg
         assert cache_layout(cfg) == "paged", (
@@ -103,6 +106,22 @@ class ServingEngine:
         self.journal = journal
         self.crashed = False  # fault injection: step() refuses to run
         self.retired = False  # drained out of a live group
+        # copy-on-write fork plane: cow=False is the equality baseline
+        # (fork branches re-prefill the whole prompt independently)
+        self.cow = cow
+        # speculative-decode lane: k draft tokens per fused step, drafted
+        # by the first `draft_layers` layers and verified by the full
+        # model in the SAME dispatch.  Greedy only: acceptance compares
+        # argmaxes, and the verifier's argmax chain is exactly the
+        # non-speculative chain, so outputs are token-identical.
+        if speculate_k:
+            assert temperature == 0.0, (
+                "the speculative lane verifies greedy argmax chains; "
+                "stochastic sampling would need rejection resampling"
+            )
+        self.speculate_k = speculate_k
+        self.draft_layers = (draft_layers if draft_layers is not None
+                             else max(cfg.num_layers // 2, 1))
 
         shape = ShapeConfig("engine", "decode", max_seq, max_slots)
         if params is None:
@@ -125,11 +144,14 @@ class ServingEngine:
         self.prefix_cache = PrefixCache(self.pool, prefix_cache_entries)
 
         self.sched = Scheduler(max_slots, self.mb, self.block,
-                               pipeline_depth, replica_id=replica_id)
+                               pipeline_depth, replica_id=replica_id,
+                               n_pool=pool_pages)
         self.dev = DeviceState(
             model, params, cache, max_slots=max_slots, mb=self.mb,
             block=self.block, temperature=temperature, top_p=top_p,
             seed=sample_seed, chunk_tokens=chunk_tokens,
+            global_pages=True, speculate_k=speculate_k,
+            draft_layers=self.draft_layers,
         )
 
         # page-ref cache: rebuilt only when the active page set changes
@@ -147,6 +169,13 @@ class ServingEngine:
         self._chunk_rr = 0  # round-robin pointer over admitting slots
         self._chunk_need_pages = 0  # staged chunk's KV-sweep page bound
         self._chunk_finalizing: Optional[Request] = None
+        # CoW fork + speculative-lane counters
+        self._next_group_id = 0
+        self.cow_copies = 0  # partial prompt pages CoW-copied
+        self.fork_admissions = 0  # branches admitted by page sharing
+        self.tokens_emitted = 0  # host-observed generated tokens
+        self.spec_drafted = 0  # draft tokens offered to the verifier
+        self.spec_accepted = 0  # ... accepted (bonus tokens beyond 1)
 
     # ------------------------------------------------------------------
     # scheduler-plane views (public API continuity)
@@ -180,6 +209,92 @@ class ServingEngine:
         if self.journal is not None:
             self.journal.record_submit(req, self.temperature, self.top_p)
         return req
+
+    def fork_submit(self, prompt: Sequence[int], n: int,
+                    max_new_tokens: int = 16,
+                    eos_id: Optional[int] = None,
+                    suffixes: Optional[Sequence[Sequence[int]]] = None,
+                    ) -> ForkGroup:
+        """Submit N branches sharing one prompt prefix.
+
+        With ``cow=True`` (default) branch 0 prefills the prefix ONCE;
+        the other branches admit by taking fork references on its pages
+        and copying only the partial last prompt page — the prompt's KV
+        is computed once and allocated ~once, not N times.  ``suffixes``
+        optionally extends branch i's prompt with its own teacher-forced
+        continuation (best-of-N over distinct steerings); without them
+        the branches diverge from the primary's first sampled token.
+        With ``cow=False`` every branch is an independent full submit —
+        the token-equality baseline."""
+        if n < 1:
+            raise ValueError("need at least one branch")
+        base = list(map(int, prompt))
+        sfx = ([list(map(int, s)) for s in suffixes]
+               if suffixes is not None else None)
+        if sfx is not None and len(sfx) != n:
+            raise ValueError("need one suffix per branch")
+        group = ForkGroup(self._next_group_id, len(base), n, sfx)
+        self._next_group_id += 1
+        for i in range(n):
+            branch_prompt = base + (sfx[i] if sfx is not None else [])
+            req = self.submit(branch_prompt, max_new_tokens, eos_id)
+            if self.cow:
+                req.group = group
+                req.branch_idx = i
+            group.branches.append(req)
+        return group
+
+    def select_winner(self, group: ForkGroup, winner_idx: int) -> Request:
+        """Best-of-N resolution: keep one branch, kill the rest.  Each
+        loser's private pages retire as ONE policy batch (one stamped
+        event for stamp-it) and its fork references on the shared prefix
+        release — the prefix itself reclaims only when the LAST branch
+        (winner included) lets go."""
+        primary = group.branches[0]
+        if winner_idx != 0 and primary.group is group and not group.ready:
+            raise RuntimeError(
+                "select_winner before the primary's prefix is on device "
+                "would strand the surviving branches"
+            )
+        group.winner = winner_idx
+        led = self.pool.ledger
+        if led is not None:
+            led.note_event("branch-kill")
+        for i, req in enumerate(group.branches):
+            if i != winner_idx:
+                self._kill_branch(req)
+        return group.branches[winner_idx]
+
+    def _kill_branch(self, req: Request) -> None:
+        if req.done:
+            return
+        req.done = True
+        req.finished_at = time.time()
+        if req.slot >= 0 and self.sched.active.get(req.slot) is req:
+            slot = req.slot
+            if self.journal is not None:
+                self.journal.record_finish(req)
+            self.sched.finished.append(req)
+            refs = self.sched.release_slot(slot)
+            own = [r for r in refs if r[0] == slot]
+            foreign = [r for r in refs if r[0] != slot]
+            if own:  # loser's private pages: one retire_many batch
+                self.pool.free_refs(own)
+            if foreign:
+                self.pool.release_fork(foreign)
+            self._refs_dirty = True
+            self.dev.stage_reset(slot)
+        elif req in self.sched.waiting:
+            # never admitted: give back its pre-taken fork references
+            self.sched.waiting.remove(req)
+            self.sched.finished.append(req)
+            refs = list(getattr(req, "_fork_shared", []))
+            partial = getattr(req, "_fork_partial", None)
+            if partial is not None:
+                refs.append(partial)
+                req._fork_partial = None  # type: ignore[attr-defined]
+            if refs:
+                self.pool.release_fork(refs)
 
     def effective_free_pages(self) -> int:
         """Chunk-aware router load signal: free pages minus the pages
@@ -314,6 +429,8 @@ class ServingEngine:
     # admission
     # ------------------------------------------------------------------
     def _admit(self, req: Request) -> bool:
+        if req.is_fork_secondary:
+            return self._admit_fork_secondary(req)
         slot = self.sched.free_slots[-1]
         prompt = req.prompt
         n_blocks = max(-(-len(prompt) // self.block), 1)
@@ -397,6 +514,91 @@ class ServingEngine:
         return True
 
     # ------------------------------------------------------------------
+    # copy-on-write fork admission
+    # ------------------------------------------------------------------
+    def _record_fork_parent(self, req: Request, group: ForkGroup) -> None:
+        """The primary's full prefix KV is enqueued on device: record
+        the shareable refs and take each un-admitted branch's fork
+        references NOW, so the prefix outlives the primary even if it
+        finishes before its siblings admit.  One ``fork_refs`` batch =
+        one stamped event for stamp-it."""
+        refs = self.sched.slot_pages[req.slot]
+        full = group.prefix_len // self.block
+        group.shared_refs = list(refs[:full])
+        group.partial_ref = (refs[full] if group.prefix_len % self.block
+                             else None)
+        take = list(group.shared_refs)
+        if group.partial_ref is not None:
+            take.append(group.partial_ref)
+        n_pending = 0
+        for b in group.branches[1:]:
+            if b.done:
+                continue
+            b._fork_shared = list(  # type: ignore[attr-defined]
+                group.shared_refs)
+            b._fork_partial = group.partial_ref  # type: ignore
+            n_pending += 1
+        if take and n_pending:
+            self.pool.fork_refs(take * n_pending)
+        group.ready = True
+
+    def _admit_fork_secondary(self, req: Request) -> bool:
+        g = req.group
+        if not g.ready:
+            return False  # primary's prefix KV not yet on device
+        sfx = (g.suffixes[req.branch_idx]
+               if g.suffixes is not None else None)
+        if not sfx and g.first_token is None:
+            return False  # branch point is the primary's first sample
+        slot = self.sched.free_slots[-1]
+        refs = list(g.shared_refs)
+        partial = getattr(req, "_fork_partial", None)
+        if partial is not None:
+            # the actual copy-on-write: this branch's own copy of the
+            # PARTIAL last prompt page (its decode writes land there);
+            # the full prefix pages stay shared read-only
+            try:
+                (own,) = self.pool.alloc(slot, 1)
+            except PoolExhausted:
+                return False
+            self.dev.copy_pages([partial[0]], [partial[1]], slot, [own])
+            self.cow_copies += 1
+            refs.append((slot, own))
+            # the copy dispatch is enqueued; device program order means
+            # it reads the parent page before any later recycler can
+            # rewrite it, so the PARTIAL-page fork reference drops here
+            # (the full-prefix refs hold until this branch finishes)
+            self.pool.release_fork([partial])
+            req._fork_partial = None  # type: ignore[attr-defined]
+        self._refs_dirty = True
+        req._first_dev = None  # type: ignore[attr-defined]
+        self.sched.bind_slot_refs(req, slot, refs, g.prefix_len)
+        if sfx:
+            # the whole suffix rides the teacher-forcing lane (replay
+            # pattern): the tf override of the admit dispatch consumes
+            # sfx[0], later dispatches the rest — setting sfx[0] via the
+            # admit token as well would double-advance on admit day
+            req._tf_suffix = list(sfx)  # type: ignore[attr-defined]
+            self.dev.stage_admit(slot, g.prefix_len,
+                                 self.sched.block_table[slot], len(refs))
+        else:
+            tok = g.first_token
+            req._tf_suffix = []  # type: ignore[attr-defined]
+            self.dev.stage_admit(slot, g.prefix_len,
+                                 self.sched.block_table[slot], len(refs),
+                                 token=tok, set_token=True)
+        self.admissions += 1
+        self.fork_admissions += 1
+        if not sfx:
+            # token 1 is the primary's token 1 (shared branch point)
+            self._emit(req, g.first_token)
+            hit_eos = (req.eos_id is not None
+                       and g.first_token == req.eos_id)
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                self._finish(slot, req)
+        return True
+
+    # ------------------------------------------------------------------
     # chunked prefill (inside the fused step)
     # ------------------------------------------------------------------
     def _advance_chunk(self) -> bool:
@@ -436,7 +638,7 @@ class ServingEngine:
         fb = start // self.block
         spages = sched.slot_pages[slot]
         write_pages = np.asarray(
-            [spages[fb + j] if fb + j < len(spages) else 0
+            [sched.gid(spages[fb + j]) if fb + j < len(spages) else 0
              for j in range(nc)], np.int32)
         is_last = end >= P
         last_index = (P - 1 - start) if is_last else (C - 1)
@@ -512,7 +714,15 @@ class ServingEngine:
         # snapshot: the back-pressure force-sync below may _finish (and
         # remove from active) any request, including this one
         for slot, req in list(sched.active.items()):
-            need = min(int(sched.lengths[slot]) // self.block + 1, self.mb)
+            # lookahead: the speculative lane writes KV up to k positions
+            # past the current length inside ONE dispatch, so the page
+            # horizon extends by k (still at most one new page per
+            # dispatch: accepted counts <= k + 1 <= block)
+            need = min(
+                (int(sched.lengths[slot]) + self.speculate_k)
+                // self.block + 1,
+                self.mb,
+            )
             if req.done or req.n_pages >= need:
                 continue
             assert need - req.n_pages == 1, "mirror drifted from device"
@@ -530,10 +740,7 @@ class ServingEngine:
                 if req.done:
                     continue  # force-sync finished this very request
                 (page,) = self.pool.alloc(slot, 1)
-            sched.block_table[slot, req.n_pages] = page
-            sched.slot_pages[slot].append(page)
-            grow[slot] = page
-            req.n_pages += 1
+            grow[slot] = sched.append_page(slot, page)
             self._refs_dirty = True
         if not sched.active and not self.dev.has_pending_chunk():
             return  # every active request finished during force-sync
@@ -553,12 +760,13 @@ class ServingEngine:
         # bucketed bound on the KV sweep: pages any active sequence — or
         # the staged prefill chunk's gather — can touch this step
         # (power-of-two bucket caps recompiles)
-        n_need = max(sched.max_need_pages(), self._chunk_need_pages, 1)
+        n_need = max(sched.max_need_pages(self.speculate_k),
+                     self._chunk_need_pages, 1)
         n_kv = min(max(_pow2_bucket(n_need), 1), self.mb)
         self.host_ns += time.perf_counter_ns() - t0
 
         stamp = self.pool.begin_step(self._page_refs)
-        tokens, chunk_first = self.dev.dispatch(tf, grow, n_kv)
+        tokens, chunk_first, spec = self.dev.dispatch(tf, grow, n_kv)
         if self._chunk_finalizing is not None:
             # the final chunk's on-device first-token sample; the host
             # materializes it at this request's first pipeline-lagged
@@ -568,10 +776,25 @@ class ServingEngine:
             self._chunk_finalizing = None
         self._chunk_need_pages = 0
         self.decode_steps += 1
+        # fork plane: once a group primary's mirror length covers the
+        # shared prefix, every prefix position's KV write is ENQUEUED
+        # (device program order), so siblings may start reading it
+        for slot, req in list(sched.active.items()):
+            g = req.group
+            if (g is not None and req.branch_idx == 0 and not g.ready
+                    and int(sched.lengths[slot]) >= g.prefix_len):
+                self._record_fork_parent(req, g)
         sched.inflight.append(
-            (stamp, tokens, dict(sched.active), sched.lengths.copy())
+            (stamp, tokens, dict(sched.active), sched.lengths.copy(),
+             spec)
         )
-        sched.advance_lengths()
+        if spec is not None:
+            # the speculative lane advances each slot by a data-dependent
+            # accepted count; the mirror needs it before the NEXT
+            # dispatch, so completion is immediate (pipeline depth 1)
+            self._complete_oldest()
+        else:
+            sched.advance_lengths()
 
     # ------------------------------------------------------------------
     # completion (the pipeline-lagged sync point)
@@ -579,11 +802,23 @@ class ServingEngine:
     def _complete_oldest(self) -> None:
         if not self.sched.inflight:
             return
-        stamp, tokens_dev, active, lengths_snap = (
+        stamp, tokens_dev, active, lengths_snap, spec = (
             self.sched.inflight.popleft()
         )
         tokens = np.asarray(jax.device_get(tokens_dev))  # sync point
+        if spec is not None:
+            v = np.asarray(jax.device_get(spec[0]))  # verifier chain
+            counts = np.asarray(jax.device_get(spec[1]))  # accepted + 1
         self.pool.complete_step(stamp)
+        if spec is not None:
+            # the device advanced each slot by its accepted count; the
+            # mirror follows the observed counts (the ONE place the spec
+            # lane syncs host bookkeeping from device data)
+            for slot, req in active.items():
+                if self.sched.active.get(slot) is req:
+                    self.sched.lengths[slot] = (
+                        int(lengths_snap[slot]) + int(counts[slot])
+                    )
         for slot, req in active.items():
             if req.done:
                 continue
@@ -598,6 +833,22 @@ class ServingEngine:
             pos = int(lengths_snap[slot])
             if pos + 1 < len(req.prompt):
                 continue  # teacher-forcing internal step
+            if spec is not None:
+                # the verifier's argmax chain IS the greedy chain: emit
+                # the accepted run (+1 bonus from the verifier itself)
+                c = int(counts[slot])
+                self.spec_drafted += self.speculate_k
+                self.spec_accepted += c - 1
+                for j in range(c):
+                    tok = int(v[slot, j])
+                    self._emit(req, tok)
+                    hit_eos = (req.eos_id is not None
+                               and tok == req.eos_id)
+                    if (len(req.generated) >= req.max_new_tokens
+                            or hit_eos):
+                        self._finish(slot, req)
+                        break
+                continue
             tok = int(tokens[slot, 0])
             self._emit(req, tok)
             hit_eos = req.eos_id is not None and tok == req.eos_id
@@ -608,6 +859,11 @@ class ServingEngine:
         """Host-observed token emission: the ONLY place generated tokens
         appear, so the replay journal can never miss one."""
         req.generated.append(tok)
+        self.tokens_emitted += 1
+        if (req.group is not None and req.branch_idx == 0
+                and req.group.first_token is None):
+            # the fork group's branch point for suffix-less best-of-N
+            req.group.first_token = tok
         if not req.first_token_at:
             req.first_token_at = time.time()
         if self.journal is not None:
@@ -619,18 +875,25 @@ class ServingEngine:
         if self.journal is not None:
             self.journal.record_finish(req)
         self.sched.finished.append(req)
-        pages = self.sched.release_slot(slot)
-        # donate full prompt blocks to the prefix cache; retire the rest
+        refs = self.sched.release_slot(slot)
+        own = [r for r in refs if r[0] == slot]
+        foreign = [r for r in refs if r[0] != slot]
+        # donate full OWN prompt blocks to the prefix cache; retire the
+        # rest as one batch; CoW-shared parent pages are not ours to
+        # donate or retire — drop our fork references instead (the LAST
+        # branch's release retires them as one batch through the policy)
         donated = set()
         for i in range(len(req.prompt) // self.block):
+            if i >= len(refs) or refs[i][0] != slot:
+                continue
             key = block_key(req.prompt[: (i + 1) * self.block])
-            if i < len(pages) and self.prefix_cache.insert(
-                key, slot, pages[i]
-            ):
-                donated.add(pages[i])
-        to_free = [p for p in pages if p not in donated]
+            if self.prefix_cache.insert(key, slot, refs[i][1]):
+                donated.add(refs[i])
+        to_free = [r for r in own if r not in donated]
         if to_free:
-            self.pool.free(slot, to_free)
+            self.pool.free_refs(to_free)
+        if foreign:
+            self.pool.release_fork(foreign)
         self._refs_dirty = True
         self.dev.stage_reset(slot)
 
@@ -672,4 +935,25 @@ class ServingEngine:
             "prefix_hits": self.prefix_cache.hits,
             "prefix_misses": self.prefix_cache.misses,
             "prefix_evictions": self.prefix_cache.evictions,
+            "prefix_evicted_while_forked": (
+                self.prefix_cache.evicted_while_forked
+            ),
+            # CoW fork plane
+            "cow": self.cow,
+            "forks_taken": self.pool.forks_taken,
+            "forks_released": self.pool.forks_released,
+            "cow_copies": self.cow_copies,
+            "fork_admissions": self.fork_admissions,
+            # speculative-decode lane
+            "speculate_k": self.speculate_k,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_acceptance": (
+                self.spec_accepted / max(self.spec_drafted, 1)
+            ),
+            "tokens_emitted": self.tokens_emitted,
+            "tokens_per_dispatch": (
+                self.tokens_emitted
+                / max(self.dev.decode_dispatches, 1)
+            ),
         }

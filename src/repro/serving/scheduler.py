@@ -37,19 +37,76 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: float = 0.0  # host observed token 1 (TTFT numerator)
     finished_at: float = 0.0
+    # copy-on-write fork state: branches of a ForkGroup share the
+    # parent's full prompt pages instead of re-prefilling them
+    group: Optional["ForkGroup"] = None
+    branch_idx: int = 0
 
     def total_pages(self, block: int) -> int:
         """Pages this request's full prompt occupies."""
         return max(-(-len(self.prompt) // block), 1)
 
+    @property
+    def is_fork_secondary(self) -> bool:
+        return self.group is not None and self.branch_idx != 0
+
+    def pending_pages(self, block: int) -> int:
+        """Pages this request still needs ALLOCATED (routing signal).
+        A CoW fork secondary shares the group's full prompt-prefix pages
+        with the parent — they are counted once, on the parent — so its
+        own footprint is just the partial-page copy (if any)."""
+        if self.is_fork_secondary:
+            shared = self.group.prefix_len // block
+            return max(self.total_pages(block) - shared, 0) - self.n_pages
+        return self.total_pages(block) - self.n_pages
+
+
+class ForkGroup:
+    """N requests sharing one prompt prefix through CoW page forking.
+
+    Branch 0 (the *primary*) prefills the prefix once; the other
+    branches admit by referencing the primary's full prefix pages via
+    global page ids (one ``fork_refs`` per branch) and copy only the
+    partial last prompt page (the actual copy-on-write).  The engine
+    records the shareable refs when the primary finishes prefilling and
+    every branch releases its fork references when it finishes or is
+    killed (``select_winner``)."""
+
+    def __init__(self, gid: int, prefix_len: int, n: int,
+                 suffixes: Optional[List[List[int]]] = None) -> None:
+        self.gid = gid
+        self.prefix_len = prefix_len  # tokens of the SHARED prefix
+        self.n = n
+        self.suffixes = suffixes  # per-branch teacher-forced extensions
+        self.branches: List[Request] = []
+        #: parent's full prefix pages, shareable cross-slot (global ids)
+        self.shared_refs: List[Tuple[int, int]] = []
+        #: parent's partial last prompt page (CoW-copied per branch)
+        self.partial_ref: Optional[Tuple[int, int]] = None
+        #: primary's prefix KV is on device (its final prefill dispatched)
+        self.ready = False
+        #: primary's first sampled token (host-observed) — the branch
+        #: point for suffix-less best-of-N groups
+        self.first_token: Optional[int] = None
+        self.winner: Optional[int] = None
+
+    @property
+    def primary(self) -> Optional[Request]:
+        return self.branches[0] if self.branches else None
+
 
 class Scheduler:
     def __init__(self, max_slots: int, mb: int, block: int,
-                 pipeline_depth: int, *, replica_id: int = 0) -> None:
+                 pipeline_depth: int, *, replica_id: int = 0,
+                 n_pool: int = 0) -> None:
         self.max_slots = max_slots
         self.replica_id = replica_id
         self.mb = mb
         self.block = block
+        # per-slot pool depth: block-table mirrors hold GLOBAL page ids
+        # (gid = owner_slot * n_pool + page), the addressing mode that
+        # lets a fork branch's table row point into the parent's pages
+        self.n_pool = n_pool
         self.pipeline_depth = pipeline_depth
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
@@ -62,14 +119,24 @@ class Scheduler:
         # lifecycle plane: a draining replica stops admitting (waiting
         # requests requeue onto survivors) but finishes what it has
         self.admissions_paused = False
-        # (stamp, tokens_dev, active snapshot, lengths snapshot)
+        # (stamp, tokens_dev, active snapshot, lengths snapshot,
+        #  spec = (verify_chain, counts) device pair or None)
         self.inflight: Deque[Tuple[int, Any, Dict[int, Request],
-                                   np.ndarray]] = deque()
+                                   np.ndarray, Any]] = deque()
         # host mirrors (bookkeeping only — never uploaded on the hot path)
         self.lengths = np.zeros((max_slots,), np.int32)
+        # block_table holds GLOBAL page ids; slot_pages holds the
+        # matching (owner_slot, page) refs — identical order, so entry i
+        # of both describes prompt/generation block i
         self.block_table = np.zeros((max_slots, mb), np.int32)
-        self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        self.slot_pages: List[List[Tuple[int, int]]] = [
+            [] for _ in range(max_slots)
+        ]
         self._next_rid = 0
+
+    def gid(self, ref: Tuple[int, int]) -> int:
+        """Global page id of a (owner_slot, page) ref."""
+        return ref[0] * self.n_pool + ref[1]
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
@@ -117,10 +184,11 @@ class Scheduler:
         the pool's free pages so a replica mid-prefill reports its TRUE
         load, not the transiently-rosy free count."""
         pending = sum(
-            r.total_pages(self.block) - r.n_pages
-            for r in self.admitting.values()
+            r.pending_pages(self.block) for r in self.admitting.values()
         )
-        pending += sum(r.total_pages(self.block) for r in self.waiting)
+        # waiting CoW fork secondaries charge only their OWN pages (the
+        # shared prefix is already allocated, and counted, on the parent)
+        pending += sum(r.pending_pages(self.block) for r in self.waiting)
         return pending
 
     def pipeline_full(self) -> bool:
@@ -129,16 +197,23 @@ class Scheduler:
     # ------------------------------------------------------------------
     def bind_slot(self, req: Request, slot: int, pages: List[int],
                   length: int) -> None:
-        """Install a request into a slot: mirrors + runtime state."""
+        """Install a request into a slot using its OWN pages."""
+        self.bind_slot_refs(req, slot, [(slot, p) for p in pages], length)
+
+    def bind_slot_refs(self, req: Request, slot: int,
+                       refs: List[Tuple[int, int]], length: int) -> None:
+        """Install a request into a slot: mirrors + runtime state.
+        ``refs`` may point into OTHER slots' pages (CoW fork branches);
+        the table row stores their global ids."""
         assert self.free_slots and self.free_slots[-1] == slot
         self.free_slots.pop()
         req.slot = slot
         req.generated = []
-        req.n_pages = len(pages)
+        req.n_pages = len(refs)
         row = np.zeros((self.mb,), np.int32)
-        row[: len(pages)] = pages
+        row[: len(refs)] = [self.gid(r) for r in refs]
         self.block_table[slot] = row
-        self.slot_pages[slot] = list(pages)
+        self.slot_pages[slot] = list(refs)
         self.lengths[slot] = length
         self.active[slot] = req
 
@@ -163,9 +238,20 @@ class Scheduler:
         req = self.admitting[slot]
         row = self.block_table[slot]
         for p in pages:
-            row[req.n_pages] = p
-            self.slot_pages[slot].append(p)
+            row[req.n_pages] = self.gid((slot, p))
+            self.slot_pages[slot].append((slot, p))
             req.n_pages += 1
+
+    def append_page(self, slot: int, page: int) -> int:
+        """Decode-growth mirror: append one own-slot page to an active
+        slot; returns the global id the device consumes as its growth
+        candidate."""
+        req = self.active[slot]
+        g = self.gid((slot, page))
+        self.block_table[slot, req.n_pages] = g
+        self.slot_pages[slot].append((slot, page))
+        req.n_pages += 1
+        return g
 
     def promote(self, slot: int, length: int) -> Request:
         """Final chunk staged: the slot joins the decode lane at
@@ -176,15 +262,16 @@ class Scheduler:
         self.active[slot] = req
         return req
 
-    def release_slot(self, slot: int) -> List[int]:
-        """Finish bookkeeping: returns the pages the slot held."""
-        pages = self.slot_pages[slot]
+    def release_slot(self, slot: int) -> List[Tuple[int, int]]:
+        """Finish bookkeeping: returns the (owner_slot, page) refs the
+        slot held — own pages AND any CoW-shared parent pages."""
+        refs = self.slot_pages[slot]
         self.slot_pages[slot] = []
         self.block_table[slot] = 0
         self.lengths[slot] = 0
         del self.active[slot]
         self.free_slots.append(slot)
-        return pages
+        return refs
 
     def advance_lengths(self) -> None:
         """Mirror of the device's ``lengths + mask`` (one per dispatch)."""
@@ -194,16 +281,20 @@ class Scheduler:
     def page_refs(self) -> List[tuple]:
         """Pages an in-flight step may read: every active slot's pages
         plus every mid-prefill slot's (chunk steps gather the earlier
-        chunks' pages through the staged block-table row)."""
+        chunks' pages through the staged block-table row).  CoW fork
+        branches contribute their PARENT's refs here, so the policy
+        protects shared pages for the step's whole in-flight window."""
         return [
-            (slot, p)
+            ref
             for slots in (self.active, self.admitting)
             for slot in slots
-            for p in self.slot_pages[slot]
+            for ref in self.slot_pages[slot]
         ]
 
-    def max_need_pages(self) -> int:
-        """Pages any active sequence can touch this step (n_kv bound)."""
+    def max_need_pages(self, lookahead: int = 0) -> int:
+        """Pages any active sequence can touch this step (n_kv bound);
+        ``lookahead`` extends the horizon by k speculative positions."""
         return max(
-            int(self.lengths[s]) // self.block + 1 for s in self.active
+            (int(self.lengths[s]) + lookahead) // self.block + 1
+            for s in self.active
         ) if self.active else 1

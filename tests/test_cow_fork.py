@@ -1,0 +1,330 @@
+"""Copy-on-write fork + speculative-decode lane tests.
+
+Pool level: fork references must defer reclamation of retired pages
+under EVERY paper policy (the CoW analogue of the paper's "no thread
+reads a freed node" invariant), and the last release must retire the
+deferred set as one batch.  Engine level: best-of-N CoW forking must be
+token-identical to independent submits while allocating a fraction of
+the prompt pages, and the speculative lane must be token-identical to
+plain greedy decode with dispatches_per_step still == 1.
+"""
+
+import pytest
+
+from repro.cluster import ReplicaGroup
+from repro.configs import ARCHS, smoke_config
+from repro.memory import PAPER_POLICIES, BlockPool
+from repro.memory.prefix_cache import PrefixCache
+from repro.models import Model
+from repro.models.transformer import BLOCK_SIZE
+from repro.serving import ServingEngine
+
+MAX_SEQ = 512
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(smoke_config(ARCHS["qwen2-0.5b"]))
+
+
+def _settle(pool, rounds=4):
+    # grace-period policies (epoch/new-epoch) free a retire only a few
+    # reclaim() advances later; settle before asserting freed counts
+    for _ in range(rounds):
+        pool.reclaim()
+
+
+# ---------------------------------------------------------------------------
+# pool plane: fork/release invariants for every paper policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_fork_blocks_reclaim_until_last_release(policy):
+    """A retired page with live fork references must not reach the free
+    list; the LAST release retires it for real; freed_total is frozen
+    while any fork lives."""
+    pool = BlockPool(1, 8, policy=policy)
+    pages = pool.alloc(0, 3)
+    refs = [(0, p) for p in pages]
+    pool.fork_refs(refs)          # branch A
+    pool.fork_refs(refs)          # branch B
+    assert all(pool.fork_count(r) == 2 for r in refs)
+
+    pool.free(0, pages)           # owner retires while branches live
+    _settle(pool)
+    assert pool.freed_total == 0, f"{policy}: freed under live forks"
+    assert pool.unreclaimed() >= len(refs)
+
+    pool.release_fork(refs)       # branch A done
+    _settle(pool)
+    assert pool.freed_total == 0, f"{policy}: freed with one fork left"
+
+    pool.release_fork(refs)       # branch B done -> one retire batch
+    _settle(pool)
+    assert pool.freed_total == len(refs), f"{policy}: not freed"
+    assert pool.unreclaimed() == 0
+    assert pool.forks_taken == pool.forks_released == 2 * len(refs)
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_fork_release_before_retire_is_transparent(policy):
+    """Releasing all forks BEFORE the owner retires leaves the normal
+    retire path untouched (nothing parked, nothing double-freed)."""
+    pool = BlockPool(1, 8, policy=policy)
+    pages = pool.alloc(0, 2)
+    refs = [(0, p) for p in pages]
+    pool.fork_refs(refs)
+    pool.release_fork(refs)
+    pool.free(0, pages)
+    _settle(pool)
+    assert pool.freed_total == len(refs)
+    assert pool.unreclaimed() == 0
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_fork_interleaves_with_steps(policy):
+    """Fork deferral and step-handle protection compose: a page both
+    read by an in-flight step and fork-referenced frees only after BOTH
+    the step completes and the last fork releases."""
+    pool = BlockPool(1, 8, policy=policy)
+    (page,) = pool.alloc(0, 1)
+    ref = (0, page)
+    step = pool.begin_step([ref])
+    pool.fork_refs([ref])
+    pool.free(0, [page])
+    _settle(pool)
+    assert pool.freed_total == 0
+    pool.complete_step(step)
+    _settle(pool)
+    assert pool.freed_total == 0, f"{policy}: fork did not hold the page"
+    pool.release_fork([ref])
+    _settle(pool)
+    assert pool.freed_total == 1
+    assert pool.unreclaimed() == 0
+
+
+def test_unmatched_release_fork_raises():
+    pool = BlockPool(1, 4, policy="stamp-it")
+    (page,) = pool.alloc(0, 1)
+    with pytest.raises(AssertionError):
+        pool.release_fork([(0, page)])
+
+
+def test_force_quiesce_clears_forks():
+    """Lifecycle plane: a dead replica's fork references must not park
+    its pages forever — force_quiesce retires the parked set."""
+    pool = BlockPool(1, 8, policy="stamp-it")
+    pages = pool.alloc(0, 2)
+    refs = [(0, p) for p in pages]
+    pool.fork_refs(refs)
+    pool.free(0, pages)
+    _settle(pool)
+    assert pool.freed_total == 0
+    pool.force_quiesce()
+    _settle(pool)
+    assert pool.freed_total == len(refs)
+
+
+def test_prefix_cache_evict_while_forked_defers():
+    """Satellite: FIFO eviction of a fork-referenced cached page is
+    counted, deferred by the policy, and retires as one batch when the
+    last fork releases."""
+    pool = BlockPool(1, 8, policy="stamp-it")
+    cache = PrefixCache(pool, max_entries=1)
+    (p0,) = pool.alloc(0, 1)
+    (p1,) = pool.alloc(0, 1)
+    assert cache.insert(("a",), 0, p0)
+    pool.fork_refs([(0, p0)])
+    assert cache.insert(("b",), 0, p1)  # evicts p0 while forked
+    assert cache.evicted_while_forked == 1
+    _settle(pool)
+    assert pool.freed_total == 0
+    pool.release_fork([(0, p0)])
+    _settle(pool)
+    assert pool.freed_total == 1
+
+
+# ---------------------------------------------------------------------------
+# engine plane: best-of-N CoW equality + page accounting
+# ---------------------------------------------------------------------------
+def test_best_of_n_cow_token_identical(model):
+    """CoW fork branches produce token-for-token the same outputs as
+    independent full submits, while allocating only ~1/N of the prompt
+    pages per extra branch."""
+    n = 3
+    prompt = list(range(7, 7 + 3 * BLOCK_SIZE + 20))  # 3 full + partial
+    base = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ, cow=False)
+    gb = base.fork_submit(prompt, n, max_new_tokens=6)
+    base.run_until_done()
+    base_alloc = base.pool.reused_total
+
+    eng = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ)
+    gc = eng.fork_submit(prompt, n, max_new_tokens=6)
+    eng.run_until_done()
+    cow_alloc = eng.pool.reused_total
+
+    outs_b = [r.generated for r in gb.branches]
+    outs_c = [r.generated for r in gc.branches]
+    assert outs_b == outs_c
+    assert all(len(o) == 6 for o in outs_c)
+
+    # prompt-page accounting: baseline pays n * pages(prompt); CoW pays
+    # pages(prompt) + (n-1) partial-page copies (<= 1/N + eps of the
+    # baseline's prompt footprint per extra branch)
+    prompt_pages = -(-len(prompt) // BLOCK_SIZE)
+    scratch = eng.max_slots  # page-0 scratch allocs, same on both sides
+    assert base_alloc - scratch >= n * prompt_pages
+    assert cow_alloc - scratch <= prompt_pages + (n - 1) + n  # + growth
+    assert eng.cow_copies == n - 1
+    assert eng.fork_admissions == n - 1
+
+    # every fork reference released; nothing left parked
+    assert eng.pool.forks_taken == eng.pool.forks_released > 0
+    eng.drain()
+    _settle(eng.pool)
+    assert eng.pool.unreclaimed() == 0
+
+
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_fork_outputs_invariant_across_policies(model, policy):
+    """The reclamation policy must never change fork-branch outputs,
+    and every policy must fully reclaim after the group drains."""
+    prompt = list(range(3, 3 + BLOCK_SIZE + 30))
+    eng = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ,
+                        policy=policy)
+    g = eng.fork_submit(prompt, 2, max_new_tokens=4)
+    eng.run_until_done()
+    assert g.branches[0].generated == g.branches[1].generated
+    assert len(g.branches[0].generated) == 4
+    eng.drain()
+    _settle(eng.pool)
+    assert eng.pool.unreclaimed() == 0
+    assert eng.pool.forks_taken == eng.pool.forks_released
+
+
+def test_fork_suffix_branches_match_independent_submits(model):
+    """Per-branch suffixes (best-of-N over distinct steerings) must
+    match the same prompts submitted independently."""
+    prompt = list(range(11, 11 + 2 * BLOCK_SIZE))  # block-aligned prefix
+    sfx = [[21], [22, 23], [24]]
+    base = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ)
+    indep = [base.submit(prompt + s, max_new_tokens=5) for s in sfx]
+    base.run_until_done()
+    eng = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ)
+    g = eng.fork_submit(prompt, 3, max_new_tokens=5, suffixes=sfx)
+    eng.run_until_done()
+    for b, r in zip(g.branches, indep):
+        assert b.generated == r.generated
+    # block-aligned prefix: no partial page, so no CoW copies at all
+    assert eng.cow_copies == 0
+
+
+def test_select_winner_retires_losers_as_batch(model):
+    """Killing the losers retires their private pages in one batch and
+    releases their fork references; the winner runs to completion."""
+    prompt = list(range(5, 5 + BLOCK_SIZE + 40))
+    eng = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ)
+    g = eng.fork_submit(prompt, 3, max_new_tokens=8)
+    for _ in range(300):
+        eng.step()
+        if all(r.generated and len(r.generated) >= 2 for r in g.branches):
+            break
+    w = eng.select_winner(g, 2)
+    assert g.branches[0].done and g.branches[1].done
+    eng.run_until_done()
+    assert len(w.generated) == 8
+    assert g.winner == 2
+    # branch-kill is a stamped point event on the ledger
+    assert eng.pool.ledger.events.get("branch-kill") == 1
+    eng.drain()
+    _settle(eng.pool)
+    assert eng.pool.unreclaimed() == 0
+    assert eng.pool.forks_taken == eng.pool.forks_released
+
+
+# ---------------------------------------------------------------------------
+# speculative-decode lane
+# ---------------------------------------------------------------------------
+def test_speculative_greedy_token_identical(model):
+    """Greedy speculative decode == plain greedy decode, token for
+    token, with the fused step still ONE dispatch per engine step."""
+    prompts = [list(range(5, 55)), list(range(60, 60 + BLOCK_SIZE + 10))]
+    base = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ)
+    b = [base.submit(p, max_new_tokens=10) for p in prompts]
+    base.run_until_done()
+
+    spec = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ,
+                         speculate_k=4)
+    s = [spec.submit(p, max_new_tokens=10) for p in prompts]
+    spec.run_until_done()
+    assert [r.generated for r in b] == [r.generated for r in s]
+    st = spec.stats()
+    assert st["dispatches_per_step"] == 1.0
+    assert st["spec_drafted"] > 0
+    assert st["tokens_per_dispatch"] >= 1.0
+
+
+def test_speculative_fork_combo(model):
+    """Speculation and CoW forking compose in the same fused step."""
+    prompt = list(range(9, 9 + BLOCK_SIZE + 25))
+    base = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ, cow=False)
+    gb = base.fork_submit(prompt, 2, max_new_tokens=6)
+    base.run_until_done()
+    eng = ServingEngine(model, max_slots=4, max_seq=MAX_SEQ,
+                        speculate_k=3)
+    gc = eng.fork_submit(prompt, 2, max_new_tokens=6)
+    eng.run_until_done()
+    assert ([r.generated for r in gb.branches]
+            == [r.generated for r in gc.branches])
+    assert eng.stats()["dispatches_per_step"] == 1.0
+
+
+def test_speculate_requires_greedy(model):
+    with pytest.raises(AssertionError):
+        ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                      speculate_k=2, temperature=0.7)
+
+
+# ---------------------------------------------------------------------------
+# cluster plane: fork-aware routing (satellite)
+# ---------------------------------------------------------------------------
+def test_least_loaded_router_counts_cow_group_once(model):
+    """A CoW fork group's waiting secondaries charge only their OWN
+    pages to effective_free_pages, so the least-loaded router sees the
+    group as ~one prompt and keeps balancing instead of treating one
+    replica as N-prompts loaded."""
+    group = ReplicaGroup(model, 2, max_slots=4, max_seq=MAX_SEQ,
+                         router="least-loaded")
+    prompt = list(range(5, 5 + 2 * BLOCK_SIZE))  # 2 pages, block-aligned
+    g = group.fork_submit(prompt, 3, max_new_tokens=3)
+    r_fork = group.route_trace[0][1]
+    # the whole group landed on ONE replica
+    assert {r for _, r in group.route_trace} == {r_fork}
+    eng = group.engines[r_fork]
+    # pending charge: 2 pages for the primary, ZERO for each block-
+    # aligned secondary (shared prefix counted once, on the parent)
+    assert eng.sched.pending_prefill_pages() == 2
+    other = group.engines[1 - r_fork]
+    # page pressure signal: the fork replica reports itself 2 pages
+    # heavier, NOT 6 — so the next submit still routes away only
+    # because of those 2 pages
+    assert (other.effective_free_pages()
+            - eng.effective_free_pages()) == 2
+    nxt = group.submit(list(range(80, 80 + BLOCK_SIZE)), max_new_tokens=3)
+    assert group.route_trace[-1][1] == 1 - r_fork
+    group.run_until_done()
+    group.drain()
+    assert all(r.done for r in g.branches) and nxt.done
+    assert group.shards.unreclaimed() == 0
+
+
+def test_cluster_fork_group_outputs(model):
+    """fork_submit through the cluster: branches equal an independent
+    cluster submit of the same prompt."""
+    group = ReplicaGroup(model, 2, max_slots=4, max_seq=MAX_SEQ)
+    prompt = list(range(40, 40 + BLOCK_SIZE + 12))
+    g = group.fork_submit(prompt, 2, max_new_tokens=4)
+    solo = group.submit(prompt, max_new_tokens=4)
+    group.run_until_done()
+    group.drain()
+    assert g.branches[0].generated == g.branches[1].generated
+    assert g.branches[0].generated == solo.generated
