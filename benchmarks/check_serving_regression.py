@@ -21,11 +21,21 @@ Gates, in order:
      least ``0.5 * best_of`` vs independent submits, and emitted at
      least one token per dispatch with the speculative lane on; an
      absent section is a SKIP.
-  5. **cluster flatness** — if ``BENCH_cluster.json`` exists, stamp-it's
+  5. **disaggregation** — if the baseline has a ``disagg`` section
+     (``benchmarks/disagg_bench.py``): tiered short-request decode ITL
+     p99 must stay flat under long-prompt injection (injected/calm <=
+     ``ITL_FLATNESS_GATE``, default 1.5x), tiered token streams must be
+     bit-identical to unified (greedy and sampled), every policy must
+     have pinned pages during the handoff window (the retire-but-held
+     story is real) with stamp-it reclaiming within one scan of commit,
+     and every policy's mid-handoff kill must unblock within the
+     heartbeat timeout + slack with streams equal to a no-fault run; an
+     absent section is a SKIP.
+  6. **cluster flatness** — if ``BENCH_cluster.json`` exists, stamp-it's
      scan-steps/step must stay flat (max/min <= the recorded gate,
      default 2x) from 1 to N replicas while the periodic checkpoint hold
      is active; an absent file/section is a SKIP.
-  6. **fault recovery** — if ``BENCH_fault.json`` exists, every policy's
+  7. **fault recovery** — if ``BENCH_fault.json`` exists, every policy's
      ``steps_to_unblock`` (kill -> surviving replicas' unreclaimed back
      at the pre-hold baseline) must be present and within the recorded
      gate (heartbeat timeout + slack), and forced hold expiry must have
@@ -185,6 +195,78 @@ def _check_cow(baseline) -> int:
     return 0
 
 
+def _check_disagg(baseline) -> int:
+    rows = baseline.get("disagg")
+    if not rows:
+        print("SKIP: no 'disagg' section in baseline (run "
+              "`python -m benchmarks.disagg_bench` to add one)")
+        return 0
+    bad = []
+    # ITL flatness: tiered short-request decode p99 under injection
+    itl_gate = float(os.environ.get("ITL_FLATNESS_GATE", "1.5"))
+    itl = {r["topology"]: r for r in rows if r.get("mode") == "itl"}
+    tiered = itl.get("tiered")
+    if tiered:
+        print(f"short-request decode ITL p99 injected/calm: tiered="
+              f"{tiered.get('itl_p99_ratio')} (gate <= {itl_gate}), "
+              f"unified="
+              f"{itl.get('unified', {}).get('itl_p99_ratio', '?')}")
+        if tiered.get("itl_p99_ratio", 99.0) > itl_gate:
+            bad.append(("itl", f"tiered ratio "
+                        f"{tiered.get('itl_p99_ratio')} > {itl_gate}"))
+        if not tiered.get("handoffs"):
+            bad.append(("itl", "tiered run completed no handoffs"))
+    # token equality: tiered == unified, greedy and sampled
+    for r in (x for x in rows if x.get("mode") == "equality"):
+        for kind in ("greedy", "sampled"):
+            if not r.get(f"{kind}_equal"):
+                bad.append(("equality", f"{kind} streams diverged"))
+            if not r.get(f"{kind}_handoffs"):
+                bad.append(("equality", f"{kind} run had no handoffs"))
+    # retire-but-held: pinned window real; stamp-it frees in one scan
+    pin = {r["policy"]: r for r in rows
+           if r.get("mode") == "handoff_pin"}
+    if pin:
+        shown = {p: (r.get("pinned_during_handoff"),
+                     r.get("reclaim_rounds_after_commit"))
+                 for p, r in pin.items()}
+        print(f"handoff window (pages pinned, scan rounds to reclaim "
+              f"after commit) by policy: {shown}")
+        for p, r in pin.items():
+            if not r.get("pinned_during_handoff"):
+                bad.append((p, "no pages pinned during handoff"))
+        si = pin.get("stamp-it")
+        if si and si.get("reclaim_rounds_after_commit", 99) > 1:
+            bad.append(("stamp-it",
+                        f"{si.get('reclaim_rounds_after_commit')} scan "
+                        f"rounds to reclaim after commit (gate <= 1)"))
+    # mid-handoff kill: bounded unblock + stitched-stream equality
+    fault = [r for r in rows
+             if r.get("bench") == "serving_disagg_fault"]
+    if fault:
+        shown = {r["policy"]: r.get("unblocked_in") for r in fault}
+        for r in fault:
+            gate = int(r.get("heartbeat_timeout",
+                             DEFAULT_HEARTBEAT_TIMEOUT)
+                       ) + UNBLOCK_SLACK_STEPS
+            if r.get("unblocked_in") is None or r["unblocked_in"] > gate:
+                bad.append((r.get("policy"),
+                            f"unblocked_in={r.get('unblocked_in')} "
+                            f"(gate <= {gate})"))
+            elif not r.get("holds_force_expired"):
+                bad.append((r.get("policy"), "no forced hold expiry"))
+            elif not r.get("streams_equal"):
+                bad.append((r.get("policy"),
+                            "post-fault streams diverged"))
+        print(f"mid-handoff kill unblock steps by policy: {shown}")
+    if bad:
+        print(f"FAIL: disagg rows out of gate: {bad}")
+        return 1
+    print(f"OK: all {len(rows)} disagg rows within gates (ITL flat, "
+          f"streams equal, holds pin then release, kills bounded)")
+    return 0
+
+
 def _check_cluster() -> int:
     if not BENCH_CLUSTER_JSON.exists():
         print("SKIP: no BENCH_cluster.json (run "
@@ -263,6 +345,9 @@ def main() -> int:
     if rc:
         return rc
     rc = _check_cow(baseline)
+    if rc:
+        return rc
+    rc = _check_disagg(baseline)
     if rc:
         return rc
     rc = _check_cluster()

@@ -345,6 +345,72 @@ def fault_table():
     return "\n".join(lines)
 
 
+def disagg_table():
+    """Tier plane: disaggregated prefill/decode replicas with
+    hold-protected mid-request KV handoff.  ITL flatness is the
+    serving-level payoff; the per-policy handoff-window rows are the
+    paper's retire-but-held asymmetry at handoff granularity."""
+    data = _load_serving_json()
+    if data is None or not data.get("disagg"):
+        return "(no disagg rows — run benchmarks/disagg_bench.py)"
+    rows = data["disagg"]
+    lines = []
+    itl = [r for r in rows if r.get("mode") == "itl"]
+    if itl:
+        lines += [
+            "Short-request decode ITL under long-prompt injection "
+            "(stamp-it, 3 replicas either way):\n",
+            "| topology | p99 calm ms | p99 injected ms | ratio | "
+            "handoffs |",
+            "|---|---|---|---|---|",
+        ]
+        for r in sorted(itl, key=lambda x: x["topology"]):
+            lines.append(
+                f"| {r['topology']} | {r['itl_p99_calm_ms']} | "
+                f"{r['itl_p99_injected_ms']} | {r['itl_p99_ratio']} | "
+                f"{r['handoffs']} |")
+    eq = [r for r in rows if r.get("mode") == "equality"]
+    for r in eq:
+        lines.append(
+            f"\nTiered == unified token streams: greedy="
+            f"{r.get('greedy_equal')} ({r.get('greedy_handoffs')} "
+            f"handoffs), sampled={r.get('sampled_equal')} "
+            f"({r.get('sampled_handoffs')} handoffs).")
+    pin = [r for r in rows if r.get("mode") == "handoff_pin"]
+    if pin:
+        lines += [
+            "\nHandoff window per policy (pages retire-but-held under "
+            "the kv-handoff hold; scan rounds to reclaim after "
+            "commit — stamp-it frees in one):\n",
+            "| policy | handoffs | pages handed off | pinned during "
+            "window | scan rounds after commit |",
+            "|---|---|---|---|---|",
+        ]
+        for r in sorted(pin, key=lambda x: x["policy"]):
+            lines.append(
+                f"| {r['policy']} | {r['handoffs']} | "
+                f"{r['pages_handed_off']} | "
+                f"{r['pinned_during_handoff']} | "
+                f"{r['reclaim_rounds_after_commit']} |")
+    fault = [r for r in rows if r.get("bench") == "serving_disagg_fault"]
+    if fault:
+        lines += [
+            "\nPrefill replica killed mid-handoff (before import, "
+            "sampled at T=0.8):\n",
+            "| policy | unblock steps | holds force-expired | "
+            "handoffs aborted | replays | streams equal |",
+            "|---|---|---|---|---|---|",
+        ]
+        for r in sorted(fault, key=lambda x: x["policy"]):
+            lines.append(
+                f"| {r['policy']} | {r['unblocked_in']} | "
+                f"{r['holds_force_expired']} | "
+                f"{r['handoffs_aborted']} | "
+                f"{r['replays_finished']}/{r['replays_submitted']} | "
+                f"{r['streams_equal']} |")
+    return "\n".join(lines)
+
+
 def _section(title, fn):
     """Render one report section; missing results JSONs degrade to a
     note instead of aborting the whole report."""
@@ -368,6 +434,8 @@ def main():
              long_prompt_table)
     _section("CoW fork + speculative lane (best-of-N page sharing)",
              cow_table)
+    _section("Tier plane: disaggregated prefill/decode with KV handoff",
+             disagg_table)
     _section("Cluster plane: replica scaling under checkpoint holds",
              cluster_table)
     _section("Lifecycle plane: replica kill, forced expiry, replay",

@@ -65,7 +65,7 @@ COW_POLICIES = ("stamp-it", "lfrc")
 #: bench names this tool can produce — merge-written sections prune rows
 #: whose bench/policy no longer exists (no ghost rows in the report)
 KNOWN_BENCHES = {"serving_pool", "serving_sweep", "serving_long_prompt",
-                 "serving_cow"}
+                 "serving_cow", "serving_disagg", "serving_disagg_fault"}
 
 
 def _pct(sorted_ms, q):
@@ -408,7 +408,8 @@ def _row_key(row):
     return (row.get("bench"), row.get("policy"),
             row.get("pipeline_depth"), row.get("slots"),
             row.get("mode"), row.get("long_prompt_tokens"),
-            row.get("best_of"), row.get("speculate_k"))
+            row.get("best_of"), row.get("speculate_k"),
+            row.get("topology"))
 
 
 def _merge_section(old_rows, new_rows):
@@ -428,18 +429,21 @@ def _merge_section(old_rows, new_rows):
 
 
 def _update_json(policies=None, sweep=None, long_prompt=None,
-                 cow=None) -> None:
+                 cow=None, disagg=None) -> None:
     """Merge-write BENCH_serving.json ({"policies", "sweep",
-    "long_prompt", "cow"}), preserving sections this run did not produce
-    and merging rows (by bench/policy/axis key) within the sections it
-    did — with stale rows pruned (see _merge_section).  Migrates the
-    PR 2 era bare-list schema."""
+    "long_prompt", "cow", "disagg"}), preserving sections this run did
+    not produce and merging rows (by bench/policy/axis key) within the
+    sections it did — with stale rows pruned (see _merge_section).
+    Migrates the PR 2 era bare-list schema.  The "disagg" section is
+    produced by benchmarks/disagg_bench.py, which imports this writer so
+    both tools share one merge/prune discipline."""
     data = {}
     if BENCH_JSON.exists():
         old = json.loads(BENCH_JSON.read_text())
         data = {"policies": old} if isinstance(old, list) else old
     for name, rows in (("policies", policies), ("sweep", sweep),
-                       ("long_prompt", long_prompt), ("cow", cow)):
+                       ("long_prompt", long_prompt), ("cow", cow),
+                       ("disagg", disagg)):
         if rows is not None:
             data[name] = _merge_section(data.get(name), rows)
     BENCH_JSON.write_text(json.dumps(data, indent=1))

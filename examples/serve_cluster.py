@@ -13,6 +13,14 @@ requests on the survivors.
 
     PYTHONPATH=src python examples/serve_cluster.py \
         --replicas 2 --kill-replica
+
+Disaggregated mode — a prefill tier and a decode tier with mid-request
+KV handoff (the router admits only to the prefill tier; every decode
+token is served by the decode tier):
+
+    PYTHONPATH=src python examples/serve_cluster.py \
+        --prefill-replicas 1 --decode-replicas 2 \
+        --prefill-chunk-tokens 256
 """
 
 import argparse
@@ -47,6 +55,18 @@ def main() -> None:
                          "the least-loaded router counts a replica's "
                          "unprefilled remainder as load); 0 = legacy "
                          "whole-prompt prefill dispatch")
+    ap.add_argument("--prefill-replicas", type=int, default=0,
+                    help="disaggregated mode: replicas in the prefill "
+                         "tier (use with --decode-replicas; overrides "
+                         "--replicas)")
+    ap.add_argument("--decode-replicas", type=int, default=0,
+                    help="disaggregated mode: replicas in the decode "
+                         "tier")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="per-tier chunk size: the prefill tier runs "
+                         "this chunk size (a multiple of the 128-token "
+                         "page) instead of --chunk-tokens; 0 = same as "
+                         "--chunk-tokens")
     ap.add_argument("--kill-replica", action="store_true",
                     help="lifecycle demo: crash replica 0 mid-traffic "
                          "while its checkpoint writer holds a cluster "
@@ -58,17 +78,30 @@ def main() -> None:
                          "is declared dead")
     ap.add_argument("--no-migration", action="store_true")
     args = ap.parse_args()
-    if args.kill_replica and args.replicas < 2:
-        ap.error("--kill-replica needs --replicas >= 2 "
+    tiered = bool(args.prefill_replicas or args.decode_replicas)
+    if tiered and not (args.prefill_replicas and args.decode_replicas):
+        ap.error("disaggregated mode needs BOTH --prefill-replicas "
+                 "and --decode-replicas")
+    n_replicas = (args.prefill_replicas + args.decode_replicas
+                  if tiered else args.replicas)
+    if args.kill_replica and n_replicas < 2:
+        ap.error("--kill-replica needs >= 2 replicas "
                  "(survivors run the replay)")
 
     model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
-    group = ReplicaGroup(
-        model, args.replicas, policy=args.policy, router=args.router,
+    kw = dict(
+        policy=args.policy, router=args.router,
         max_slots=2, max_seq=512, pipeline_depth=2,
         prefix_cache_entries=16, extra_pages_per_slot=4,
         chunk_tokens=args.chunk_tokens,
     )
+    if tiered:
+        kw.update(
+            prefill_replicas=args.prefill_replicas,
+            decode_replicas=args.decode_replicas,
+            prefill_chunk_tokens=(args.prefill_chunk_tokens or None),
+        )
+    group = ReplicaGroup(model, args.replicas, **kw)
     lifecycle = LifecycleManager(
         group, heartbeat_timeout=args.heartbeat_timeout)
 
@@ -146,6 +179,25 @@ def main() -> None:
     print(f"checkpoints: {s['checkpoints']}  holds issued: "
           f"{s['holds_issued']}  unreclaimed after drain: "
           f"{s['unreclaimed']}")
+    if tiered:
+        ts = s["tiers"]
+        print(f"tiers: prefill={ts['prefill_ids']} "
+              f"decode={ts['decode_ids']}  handoffs: "
+              f"{ts['handoffs_completed']} completed / "
+              f"{ts['handoffs_aborted']} aborted  pages handed off: "
+              f"{ts['pages_handed_off']}  mean hold window: "
+              f"{ts['mean_hold_ticks']:.1f} ticks")
+        decode_served = sum(
+            s["per_replica"][i]["tokens_emitted"]
+            for i in ts["decode_ids"]
+            if i < len(s["per_replica"])
+        )
+        print(f"decode-tier tokens served: {decode_served}")
+        if not args.kill_replica:
+            assert ts["handoffs_completed"] > 0, (
+                "tiered mode must hand off mid-request"
+            )
+            assert ts["inflight_handoffs"] == 0
     if killed:
         ls = lifecycle.stats()
         print(f"lifecycle: dead={ls['dead']} (deadline at tick "

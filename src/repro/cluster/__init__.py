@@ -13,7 +13,9 @@ See docs/cluster_serving.md.  Composition:
   * routers — round-robin / least-loaded / prefix-affinity over the
     live replicas (router.py);
   * :func:`migrate_prefix` — hold-protected prefix-cache migration
-    (migration.py).
+    (migration.py);
+  * :class:`TierManager` — disaggregated prefill/decode tiers with
+    hold-protected mid-request KV handoff (tiers.py).
 """
 
 from .group import ReplicaGroup
@@ -29,10 +31,12 @@ from .router import (
     Router,
     make_router,
 )
+from .tiers import HANDOFF_TAG, HandoffPacket, TierManager
 
 __all__ = [
     "ReplicaGroup", "ClusterLedger", "ClusterHold", "LifecycleManager",
     "RequestJournal", "JournalEntry", "Router",
     "RoundRobinRouter", "LeastLoadedRouter", "PrefixAffinityRouter",
     "ROUTERS", "make_router", "migrate_prefix", "prefix_keys",
+    "TierManager", "HandoffPacket", "HANDOFF_TAG",
 ]

@@ -32,6 +32,14 @@ engines are never renumbered, husks stay in ``engines`` with
 Params are shared: all replicas serve the same model, so ONE param tree
 is built and passed to every engine (device arrays for KV state stay
 per-replica).
+
+Disaggregated mode (``prefill_replicas=P, decode_replicas=D``) splits
+the replicas into a prefill tier and a decode tier joined by a
+:class:`~repro.cluster.tiers.TierManager`: the router admits only to
+the prefill tier, chunked prefill parks at completion, and the
+request's whole-prompt KV hands off mid-request to a decode replica
+under a hold-protected export/import/commit protocol — see tiers.py
+and docs/cluster_serving.md.
 """
 
 from __future__ import annotations
@@ -46,6 +54,7 @@ from ..serving.scheduler import ForkGroup, Request
 from .journal import RequestJournal
 from .ledger import ClusterHold, ClusterLedger
 from .router import Router, make_router
+from .tiers import TierManager
 
 
 class ReplicaGroup:
@@ -69,7 +78,23 @@ class ReplicaGroup:
         cow: bool = True,
         speculate_k: int = 0,
         draft_layers: Optional[int] = None,
+        prefill_replicas: Optional[int] = None,
+        decode_replicas: Optional[int] = None,
+        prefill_chunk_tokens: Optional[int] = None,
+        handoff_import_delay: int = 0,
     ) -> None:
+        # disaggregated mode: replicas 0..P-1 form the prefill tier,
+        # P..P+D-1 the decode tier (n_replicas is derived, not taken)
+        if (prefill_replicas is None) != (decode_replicas is None):
+            raise ValueError(
+                "tiered mode needs BOTH prefill_replicas and "
+                "decode_replicas (or neither)"
+            )
+        self._tiered = prefill_replicas is not None
+        if self._tiered:
+            if prefill_replicas < 1 or decode_replicas < 1:
+                raise ValueError("both tiers need at least one replica")
+            n_replicas = prefill_replicas + decode_replicas
         if n_replicas < 1:
             raise ValueError("need at least one replica")
         if not isinstance(policy, str):
@@ -103,14 +128,44 @@ class ReplicaGroup:
         # BLOCK_SIZE chunk per fused step); 0 = legacy whole-prompt
         if chunk_tokens is not None:
             self._engine_kw["chunk_tokens"] = chunk_tokens
+        # per-tier chunk size: the prefill tier may run larger chunks
+        # than mixed replicas (it never shares a dispatch with decodes)
+        self._prefill_chunk_tokens = prefill_chunk_tokens
+        if self._tiered:
+            resolved = (prefill_chunk_tokens
+                        if prefill_chunk_tokens is not None
+                        else self._engine_kw.get("chunk_tokens", -1))
+            if resolved == 0:
+                raise ValueError(
+                    "the prefill tier needs chunked prefill (the handoff "
+                    "parks at the final chunk); chunk_tokens=0 is the "
+                    "legacy whole-prompt path"
+                )
+        roles = [
+            ("prefill" if self._tiered and i < (prefill_replicas or 0)
+             else "decode" if self._tiered else "unified")
+            for i in range(n_replicas)
+        ]
         self.engines: List[ServingEngine] = [
-            self._make_engine(i) for i in range(n_replicas)
+            self._make_engine(i, role=roles[i]) for i in range(n_replicas)
         ]
         self.ledger = ClusterLedger(
             [e.pool.policy for e in self.engines]
         )
+        self.tiers: Optional[TierManager] = None
+        if self._tiered:
+            self.tiers = TierManager(
+                self,
+                prefill_ids=list(range(prefill_replicas)),
+                decode_ids=list(range(prefill_replicas, n_replicas)),
+                import_delay=handoff_import_delay,
+            )
         self.router: Router = make_router(router)
         self.requests: List[Request] = []
+        #: group-level submission counter: sample keys are derived from
+        #: it, NOT from routing, so tiered/unified and fault/no-fault
+        #: runs over the same request stream sample identically
+        self._submits = 0
         #: routing decisions in submit order: [(rid-in-cluster, replica)]
         self.route_trace: List[tuple] = []
         #: lifecycle plane, attached by LifecycleManager(group, ...)
@@ -120,10 +175,14 @@ class ReplicaGroup:
         self.replicas_added = 0
         self.replicas_drained = 0
 
-    def _make_engine(self, i: int) -> ServingEngine:
+    def _make_engine(self, i: int,
+                     role: str = "unified") -> ServingEngine:
+        kw = dict(self._engine_kw)
+        if role == "prefill" and self._prefill_chunk_tokens is not None:
+            kw["chunk_tokens"] = self._prefill_chunk_tokens
         return ServingEngine(
             self.model,
-            **self._engine_kw,
+            **kw,
             # decorrelate sampled streams across replicas
             sample_seed=self._sample_seed + i,
             replica_id=i,
@@ -141,13 +200,31 @@ class ReplicaGroup:
         return [i for i, e in enumerate(self.engines)
                 if not (e.crashed or e.retired)]
 
+    def route_ids(self) -> List[int]:
+        """Replicas the router ADMITS new requests to: the live prefill
+        tier in disaggregated mode (decode replicas never prefill), all
+        live replicas otherwise — falling back to all live when the
+        prefill tier is entirely down, so requests keep flowing (those
+        admissions run unified on their fallback replica)."""
+        if self.tiers is None:
+            return self.live_ids()
+        return self.tiers.live_prefill() or self.live_ids()
+
     # ------------------------------------------------------------------
     # request plane
     # ------------------------------------------------------------------
+    def _next_sample_key(self) -> int:
+        key = (self._sample_seed * 1_000_003 + self._submits) & 0x7FFFFFFF
+        self._submits += 1
+        return key
+
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
         r = self.router.pick(self, prompt)
-        req = self.engines[r].submit(prompt, max_new_tokens, eos_id)
+        req = self.engines[r].submit(prompt, max_new_tokens, eos_id,
+                                     sample_key=self._next_sample_key())
+        if self.tiers is not None:
+            self.tiers.mark(req, r)
         self.route_trace.append((len(self.requests), r))
         self.requests.append(req)
         return req
@@ -174,17 +251,28 @@ class ReplicaGroup:
         return group
 
     def submit_replay(self, prompt: Sequence[int], max_new_tokens: int,
-                      eos_id: Optional[int] = None) -> Request:
+                      eos_id: Optional[int] = None,
+                      sample_key: Optional[int] = None) -> Request:
         """Lifecycle-internal admission: routed and journaled like any
         submit, but NOT listed in ``requests``/``route_trace`` — the
         replay's tokens surface on the ORIGINAL request when the
         lifecycle plane stitches, so request- and token-accounting over
-        ``group.requests`` counts every served token exactly once."""
+        ``group.requests`` counts every served token exactly once.
+        ``sample_key`` carries the dead request's journaled RNG state so
+        the resumed stream continues bit-identically."""
         r = self.router.pick(self, prompt)
-        return self.engines[r].submit(prompt, max_new_tokens, eos_id)
+        req = self.engines[r].submit(prompt, max_new_tokens, eos_id,
+                                     sample_key=sample_key)
+        if self.tiers is not None:
+            self.tiers.mark(req, r)
+        return req
 
     def has_work(self) -> bool:
         if any(self.engines[i].sched.has_work() for i in self.live_ids()):
+            return True
+        # an in-flight handoff packet lives in NO scheduler between
+        # export and import — the tier manager must keep ticking
+        if self.tiers is not None and self.tiers.pending():
             return True
         # the lifecycle plane may still owe progress (a silent replica
         # inside its heartbeat-timeout window, unfinished replays)
@@ -208,6 +296,10 @@ class ReplicaGroup:
                 self.lifecycle.beat(i, eng.steps)
         if self.lifecycle is not None:
             self.lifecycle.tick()
+        if self.tiers is not None:
+            # after lifecycle: a death declared THIS step aborts its
+            # packets in the same cluster step (hold already expired)
+            self.tiers.tick()
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         start = self.steps  # lifetime counter: bound THIS call's work
@@ -282,11 +374,17 @@ class ReplicaGroup:
         eng.pause_admissions()
         # 1. hand the not-yet-admitted queue back to the router
         requeued = eng.sched.take_waiting()
-        # 2. finish what it already admitted (no new admissions)
+        # 2. finish what it already admitted (no new admissions); in
+        #    tiered mode the tier manager keeps ticking so parked
+        #    prefill-done requests hand off to the decode tier and every
+        #    packet naming this replica clears before it retires
         n = 0
         while (eng.sched.active or eng.sched.admitting
-               or eng.sched.inflight):
+               or eng.sched.inflight or eng.sched.prefill_done
+               or (self.tiers is not None and self.tiers.involves(i))):
             eng.step()
+            if self.tiers is not None:
+                self.tiers.tick()
             n += 1
             if n > max_steps:  # pragma: no cover
                 raise RuntimeError("drain did not converge")
@@ -321,26 +419,63 @@ class ReplicaGroup:
         for req in requeued:
             r = self.router.pick(self, req.prompt)
             self.engines[r].adopt(req)
+            if self.tiers is not None:
+                self.tiers.mark(req, r)  # re-mark for the NEW replica
             if req in self.requests:
                 self.route_trace.append((self.requests.index(req), r))
         return {"replica": i, "requeued": len(requeued),
                 "prefix_blocks_migrated": migrated, "migrated_to": dst,
                 "drain_steps": n}
 
-    def add_replica(self) -> int:
+    def add_replica(self, tier: Optional[str] = None) -> int:
         """Grow a RUNNING group by one replica: fresh shard, fresh stamp
         domain, same shared params.  Returns the new replica id.  The
         router targets it from the next pick; open cluster holds do not
-        cover it (they never needed to — see ClusterLedger.add_domain)."""
+        cover it (they never needed to — see ClusterLedger.add_domain).
+        In tiered mode ``tier`` names the tier it joins (default:
+        decode — decode capacity is usually the scarce one)."""
+        if tier is not None and self.tiers is None:
+            raise ValueError("tier= needs a tiered group")
+        if self.tiers is not None and tier is None:
+            tier = "decode"
         i = self.shards.grow()
         assert i == len(self.engines), "replica ids must stay dense"
-        eng = self._make_engine(i)
+        eng = self._make_engine(
+            i, role=tier if self.tiers is not None else "unified")
         self.engines.append(eng)
         self.ledger.add_domain(eng.pool.policy)
+        if self.tiers is not None:
+            self.tiers.register(i, tier)
         if self.lifecycle is not None:
             self.lifecycle.watch(i)
         self.replicas_added += 1
         return i
+
+    def scale_tier(self, tier: str, delta: int) -> List[int]:
+        """Re-provision one tier of a RUNNING group: ``delta`` > 0 adds
+        fresh replicas to it (live scale-up), ``delta`` < 0 drains its
+        highest-id live members one by one (cooperative retirement —
+        parked/admitted work hands off or finishes first).  Prefill and
+        decode capacity provision independently; a tier never shrinks
+        below one live replica.  Returns the affected replica ids."""
+        if self.tiers is None:
+            raise ValueError("scale_tier needs a tiered group")
+        if tier not in ("prefill", "decode"):
+            raise ValueError(f"unknown tier {tier!r}")
+        changed: List[int] = []
+        for _ in range(max(delta, 0)):
+            changed.append(self.add_replica(tier=tier))
+        for _ in range(max(-delta, 0)):
+            ids = (self.tiers.live_prefill() if tier == "prefill"
+                   else self.tiers.live_decode())
+            if len(ids) <= 1:
+                raise ValueError(
+                    f"cannot drain the last live {tier} replica"
+                )
+            i = max(ids)
+            self.drain_replica(i)
+            changed.append(i)
+        return changed
 
     # ------------------------------------------------------------------
     # cross-replica actors
@@ -401,6 +536,8 @@ class ReplicaGroup:
             "replicas_drained": self.replicas_drained,
             "per_replica": per,
         }
+        if self.tiers is not None:
+            out["tiers"] = self.tiers.stats()
         if self.lifecycle is not None:
             out["lifecycle"] = self.lifecycle.stats()
         return out

@@ -3,12 +3,13 @@
 A replica's in-flight requests die with it — unless enough is recorded
 *outside* the replica to re-admit them elsewhere.  The journal is that
 record: one entry per OPEN request holding the prompt, the sampling
-parameters it was admitted under, and every token the host has observed
-(appended at pipeline-lagged completion, i.e. only tokens that actually
-reached the client); finished entries prune, so the journal stays
-O(in-flight requests).  It deliberately records nothing device-resident:
-KV pages, in-flight samples and the first-token buffer are all lost on a
-crash, exactly as they would be on a real machine.
+parameters it was admitted under, the request's ``sample_key`` (the
+journaled RNG state), and every token the host has observed (appended
+at pipeline-lagged completion, i.e. only tokens that actually reached
+the client); finished entries prune, so the journal stays O(in-flight
+requests).  It deliberately records nothing device-resident: KV pages,
+in-flight samples and the first-token buffer are all lost on a crash,
+exactly as they would be on a real machine.
 
 Replay semantics (:mod:`repro.cluster.lifecycle`):
 
@@ -18,13 +19,23 @@ Replay semantics (:mod:`repro.cluster.lifecycle`):
     only the remaining budget.  Greedy decoding is a deterministic
     function of (params, token prefix), so the stitched stream
     ``emitted + replayed`` is bit-identical to a no-fault run.
-  * **sampled** requests restart from the original prompt with the full
-    budget: sample streams are seeded per replica, so the emitted prefix
-    is not reproducible elsewhere and must not be stitched.
+  * **sampled** requests resume the same way whenever the journal holds
+    their ``sample_key``: the device derives the uniform that samples
+    the token at sequence index ``pos`` as
+    ``counter_uniform(sample_key, pos)`` — a pure function of (key,
+    position), never of which replica runs the step — so a survivor
+    teacher-forcing ``prompt + emitted`` picks the sample stream up at
+    exactly the next index, bit-identically.  Only keyless sampled
+    requests (no journaled RNG state) restart from scratch.
 
 The engine calls the three ``record_*`` hooks (duck-typed — the serving
 plane takes any object with these methods, keeping the layering: the
-cluster plane knows the engine, never the reverse).
+cluster plane knows the engine, never the reverse).  The tier plane
+adds ``record_handoff``: once a mid-request KV handoff COMMITS, the
+destination replica's journal owns the request (the engine's
+``import_request`` re-records it there), so the source entry prunes —
+a source death after commit must not replay a request that is alive
+and decoding on the destination.
 """
 
 from __future__ import annotations
@@ -44,17 +55,28 @@ class JournalEntry:
     #: host-observed tokens, in emission order (never device-resident)
     emitted: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: journaled RNG state: the per-request counter-sampling key.  With
+    #: it, a sampled request resumes token-for-token on any replica;
+    #: None (keyless) falls back to restart-from-scratch.
+    sample_key: Optional[int] = None
 
     @property
     def greedy(self) -> bool:
         return self.temperature == 0.0
+
+    @property
+    def resumable(self) -> bool:
+        """True when the emitted prefix is reproducible on a survivor:
+        greedy (deterministic in the token prefix) or sampled with a
+        journaled key (counter sampling is deterministic in (key, pos))."""
+        return self.greedy or self.sample_key is not None
 
     def remaining(self) -> int:
         return max(self.max_new_tokens - len(self.emitted), 0)
 
     def resume_prompt(self) -> List[int]:
         """The token prefix a survivor teacher-forces through on a
-        greedy resume: original prompt plus everything already served."""
+        resume: original prompt plus everything already served."""
         return list(self.prompt) + list(self.emitted)
 
 
@@ -70,6 +92,7 @@ class RequestJournal:
         self.entries: Dict[int, JournalEntry] = {}
         self.tokens_recorded = 0
         self.finished_total = 0
+        self.handed_off_total = 0
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -80,6 +103,8 @@ class RequestJournal:
         self.entries[req.rid] = JournalEntry(
             req.rid, list(req.prompt), req.max_new_tokens, req.eos_id,
             temperature, top_p,
+            emitted=list(req.generated or []),
+            sample_key=req.sample_key,
         )
 
     def record_token(self, req, tok: int) -> None:
@@ -93,6 +118,16 @@ class RequestJournal:
         if e is not None:
             e.done = True
             self.finished_total += 1
+
+    # -- tier plane ------------------------------------------------------
+    def record_handoff(self, rid: int) -> None:
+        """Handoff COMMITTED: ownership moved to the destination
+        replica's journal, so the source entry prunes — exactly like a
+        finish, but counted separately.  Keyed by the SOURCE-side rid
+        (the request object's rid was reassigned at import)."""
+        e = self.entries.pop(rid, None)
+        if e is not None:
+            self.handed_off_total += 1
 
     # -- lifecycle plane -------------------------------------------------
     def open_entries(self) -> List[JournalEntry]:

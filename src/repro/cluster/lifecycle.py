@@ -26,11 +26,13 @@ plane:
   * **request replay** — the dead replica's journal
     (:class:`~repro.cluster.journal.RequestJournal`) re-admits its
     unfinished requests on survivors through the group's router.
-    Greedy requests *resume token-for-token*: the survivor
-    teacher-forces ``prompt + emitted`` and generates only the
-    remaining budget, so the stitched stream is bit-identical to a
-    no-fault run.  Sampled requests restart from scratch (their stream
-    was seeded on the dead replica).
+    *Resumable* entries — greedy, or sampled with a journaled
+    ``sample_key`` (counter sampling: the u for sequence index ``pos``
+    is ``counter_uniform(key, pos)``, replica-independent) — resume
+    token-for-token: the survivor teacher-forces ``prompt + emitted``
+    and generates only the remaining budget, so the stitched stream is
+    bit-identical to a no-fault run.  Only keyless sampled requests
+    restart from scratch.
 
 The manager never reads fault-injection state (``engine.crashed``) to
 *detect* anything — detection is purely missed heartbeats, exactly as a
@@ -223,11 +225,15 @@ class LifecycleManager:
                 orig.finished_at = time.time()
                 self.replays_recovered += 1
                 continue
-            if e.greedy:
+            if e.resumable:
+                # greedy OR sampled-with-journaled-key: the emitted
+                # prefix is reproducible anywhere, so teacher-force it
+                # and generate only the remainder
                 prompt, budget = e.resume_prompt(), e.remaining()
             else:
                 prompt, budget = list(e.prompt), e.max_new_tokens
-            r = self.group.submit_replay(prompt, budget, e.eos_id)
+            r = self.group.submit_replay(prompt, budget, e.eos_id,
+                                         sample_key=e.sample_key)
             self.replays.append((orig, r, e))
             self.replays_submitted += 1
 
@@ -244,14 +250,15 @@ class LifecycleManager:
         return None
 
     def _stitch(self) -> None:
-        """Completed replays finish their original requests: greedy
-        streams stitch as emitted + replayed (token-for-token equal to a
-        no-fault run), sampled streams replace wholesale."""
+        """Completed replays finish their original requests: resumable
+        streams (greedy, or sampled with a journaled key) stitch as
+        emitted + replayed (token-for-token equal to a no-fault run);
+        only keyless sampled streams replace wholesale."""
         for orig, r, e in self.replays:
             if orig.done or not r.done:
                 continue
             orig.generated = ((list(e.emitted) + list(r.generated))
-                              if e.greedy else list(r.generated))
+                              if e.resumable else list(r.generated))
             orig.done = True
             orig.finished_at = r.finished_at
             orig.resumed_on = r.replica  # type: ignore[attr-defined]

@@ -32,10 +32,12 @@ from ..memory.prefix_cache import prefix_block_keys
 class Router:
     """Strategy interface: ``pick`` returns a LIVE replica index.
 
-    Routers only ever see ``group.live_ids()`` — a crashed or retired
-    replica leaves the target set the moment its flag flips, which is
-    what makes ``drain_replica``/``add_replica`` re-target atomically
-    (no router has partial-membership state to migrate)."""
+    Routers only ever see ``group.route_ids()`` — the live replicas, or
+    in disaggregated mode the live PREFILL tier (decode replicas never
+    admit; they receive work via the mid-request KV handoff).  A crashed
+    or retired replica leaves the target set the moment its flag flips,
+    which is what makes ``drain_replica``/``add_replica`` re-target
+    atomically (no router has partial-membership state to migrate)."""
 
     name = "abstract"
 
@@ -50,7 +52,7 @@ class RoundRobinRouter(Router):
         self._next = 0
 
     def pick(self, group, prompt: Sequence[int]) -> int:
-        live = group.live_ids()
+        live = group.route_ids()
         r = live[self._next % len(live)]
         self._next += 1
         return r
@@ -66,7 +68,7 @@ class LeastLoadedRouter(Router):
         # long prompt is only partially admitted); ties -> shallowest
         # queue -> lowest replica id
         return min(
-            group.live_ids(),
+            group.route_ids(),
             key=lambda i: (
                 -group.engines[i].effective_free_pages(),
                 group.engines[i].sched.queue_depth(),
@@ -82,7 +84,7 @@ class PrefixAffinityRouter(Router):
         self._fallback = LeastLoadedRouter()
 
     def pick(self, group, prompt: Sequence[int]) -> int:
-        live = group.live_ids()
+        live = group.route_ids()
         keys = prefix_block_keys(prompt, group.engines[live[0]].block)
         best_r, best_len = -1, 0
         if keys:

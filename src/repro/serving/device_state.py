@@ -23,7 +23,12 @@ bookkeeping and to detect exhaustion (back-pressure) BEFORE dispatch.
 
 Sampling runs on device inside the same dispatch: temperature/top-p via
 sorted inverse-CDF (:func:`sample_tokens`), with greedy argmax as the
-statically-compiled ``temperature == 0`` fast path.
+statically-compiled ``temperature == 0`` fast path.  The uniforms are
+COUNTER-BASED (:func:`counter_uniform`): each slot carries its request's
+``sample_key`` and the u for the token at sequence index ``pos`` is a
+pure function of ``(sample_key, pos)`` — no engine-resident RNG chain —
+so a sampled continuation is bit-reproducible on any replica that knows
+the prefix and the key (lifecycle replay, tier-plane KV handoff).
 ``repro.serving.sampling`` holds the host reference implementation;
 tests assert parity.
 """
@@ -61,6 +66,22 @@ def sample_tokens(logits, u, temperature: float, top_p: float):
     return jnp.take_along_axis(order, idx[:, None], axis=-1)[:, 0].astype(
         jnp.int32
     )
+
+
+def counter_uniform(seed, position):
+    """The serving stack's sampling uniform: a pure counter-based function
+    of ``(sample_key, token position)`` — NO engine-resident RNG chain.
+
+    ``u = uniform(fold_in(fold_in(PRNGKey(0), seed), position))``, so the
+    u that samples the token at sequence index ``position`` depends only
+    on the request's journaled ``sample_key`` and the index itself.  Any
+    replica that knows the prefix and the key reproduces the continuation
+    bit-for-bit — the property the lifecycle plane's sampled replay and
+    the tier plane's mid-request KV handoff both rest on.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    key = jax.random.fold_in(key, position)
+    return jax.random.uniform(key, (), jnp.float32)
 
 
 class DeviceState:
@@ -131,7 +152,12 @@ class DeviceState:
         self.mask = jnp.zeros((B,), jnp.int32)
         self.pages = jnp.zeros((B,), jnp.int32)
         self.first_buf = jnp.zeros((B,), jnp.int32)
-        self.rng = jax.random.PRNGKey(seed)
+        # per-slot sample keys (installed at admit): sampling is a pure
+        # function of (key, position) — see counter_uniform — so a
+        # request's stream is replica-independent.  The legacy engine rng
+        # chain is gone; `seed` survives only as the engine-level default
+        # key derivation salt (see ServingEngine.submit).
+        self.seeds = jnp.zeros((B,), jnp.int32)
 
         # staged host events, applied by the next fused dispatch
         self._pending_resets: List[int] = []
@@ -160,19 +186,20 @@ class DeviceState:
         self.decode_dispatches = 0
         self.admission_dispatches = 0
         self.migration_dispatches = 0  # cluster plane, cold path
+        self.page_move_buckets: set = set()  # pow2 handoff index shapes
 
         # ---- jitted device functions ----
         # n_kv is static: one compile per power-of-two page-sweep bucket
         # (x2 with the chunked-prefill lane folded in — has_chunk is the
         # ONLY other static axis; the chunk lane's token shape is fixed at
         # construction, so prompt length never mints a compile entry).
-        # Donated: cache, lengths, table, mask, pages, rng.  NOT donated:
-        # tokens (in-flight pipeline entries keep references for their
-        # completion device_get) and first_buf (returned updated instead —
-        # the chunk lane writes it on a prompt's final chunk).
+        # Donated: cache, lengths, table, mask, pages, seeds.  NOT
+        # donated: tokens (in-flight pipeline entries keep references for
+        # their completion device_get) and first_buf (returned updated
+        # instead — the chunk lane writes it on a prompt's final chunk).
         self._step = jax.jit(
             self._step_fn, donate_argnums=(1, 3, 4, 5, 6, 8),
-            static_argnums=(27, 28),
+            static_argnums=(29, 30),
         )
         # fused prefill+KV-load, keyed by bucketed seq length: a classic
         # admission is ONE dispatch (satellite of the PR 2 open item)
@@ -183,10 +210,11 @@ class DeviceState:
     # fused step (ONE dispatch per engine step)
     # ------------------------------------------------------------------
     def _step_fn(self, params, cache, tokens, lengths, table, mask, pages,
-                 first_buf, rng, reset_m, admit_m, admit_len, admit_row,
+                 first_buf, seeds, reset_m, admit_m, admit_len, admit_row,
                  admit_pages, admit_tok, admit_from_buf, admit_set_tok,
-                 tf_m, tf_vals, cand_pages, ck_tokens, ck_slot, ck_start,
-                 ck_row, ck_pages, ck_last, ck_last_index, n_kv, has_chunk):
+                 admit_seed, tf_m, tf_vals, cand_pages, ck_tokens, ck_slot,
+                 ck_start, ck_row, ck_pages, ck_last, ck_last_index,
+                 ck_seed, n_kv, has_chunk):
         B = self.max_slots
         rows = jnp.arange(B, dtype=jnp.int32)
 
@@ -195,6 +223,7 @@ class DeviceState:
         lengths = lengths * keep
         mask = mask * keep
         pages = pages * keep
+        seeds = seeds * keep
         table = table * keep[:, None]
 
         # 1b. chunked-prefill lane (at most ONE chunk per step; static
@@ -214,8 +243,10 @@ class DeviceState:
                 n_kv=n_kv, global_pages=self.global_pages,
             )
             if self.temperature > 0.0:
-                rng, sub = jax.random.split(rng)
-                u = jax.random.uniform(sub, (1,), jnp.float32)
+                # token 1 lands at sequence index start + last_index + 1
+                # (== the prompt length, on the final chunk)
+                u = counter_uniform(ck_seed,
+                                    ck_start + ck_last_index + 1)[None]
                 first = sample_tokens(ck_logits, u, self.temperature,
                                       self.top_p)
             else:
@@ -230,6 +261,7 @@ class DeviceState:
         table = jnp.where(admit_m[:, None] == 1, admit_row, table)
         mask = jnp.maximum(mask, admit_m)
         pages = jnp.where(admit_m == 1, admit_pages, pages)
+        seeds = jnp.where(admit_m == 1, admit_seed, seeds)
         first = jnp.where(admit_from_buf == 1, first_buf, admit_tok)
         tokens = jnp.where(admit_set_tok[:, None] == 1, first[:, None],
                            tokens)
@@ -308,7 +340,7 @@ class DeviceState:
             # counts, and later steps overwrite those offsets before any
             # window reaches them.
             return (new_tokens[:, None], cache, lengths + counts * mask,
-                    table, mask, pages, first_buf, rng, chunk_first,
+                    table, mask, pages, first_buf, seeds, chunk_first,
                     v, counts * mask)
 
         # 5. decode
@@ -318,22 +350,25 @@ class DeviceState:
             n_kv=n_kv, global_pages=gp,
         )
 
-        # 6. sample (greedy is the statically-compiled temperature=0 path)
+        # 6. sample (greedy is the statically-compiled temperature=0 path).
+        # The token this dispatch emits lands at sequence index
+        # lengths + 1 (index `lengths` holds the token being consumed),
+        # so its uniform is counter_uniform(slot key, lengths + 1) —
+        # position-keyed, engine-independent.
         if self.temperature > 0.0:
-            rng, sub = jax.random.split(rng)
-            u = jax.random.uniform(sub, (B,), jnp.float32)
+            u = jax.vmap(counter_uniform)(seeds, lengths + 1)
             new_tokens = sample_tokens(logits, u, self.temperature,
                                        self.top_p)
         else:
             new_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return (new_tokens[:, None], cache, lengths + mask, table, mask,
-                pages, first_buf, rng, chunk_first)
+                pages, first_buf, seeds, chunk_first)
 
     # ------------------------------------------------------------------
     # admission-plane bodies (per-request, not per-step)
     # ------------------------------------------------------------------
     def _prefill_fn(self, params, cache, tokens, last_index, first_buf,
-                    rng, slot, pages):
+                    seed, slot, pages):
         """Fused prefill: forward pass + first-token sample + KV scatter
         into this slot's pages, in ONE dispatch.  ``pages`` always spans
         the full power-of-two bucket (the caller pads spare entries with
@@ -348,8 +383,8 @@ class DeviceState:
         # Token 1 uses the SAME sampler as decode steps, so sampled mode
         # is consistent from position 0.
         if self.temperature > 0.0:
-            rng, sub = jax.random.split(rng)
-            u = jax.random.uniform(sub, (1,), jnp.float32)
+            # token 1's sequence index is last_index + 1 == prompt length
+            u = counter_uniform(seed, last_index[0] + 1)[None]
             first = sample_tokens(logits, u, self.temperature, self.top_p)
         else:
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -366,7 +401,7 @@ class DeviceState:
         )
         cache = dict(cache, layers=dict(
             cache["layers"], k_pool=kp, v_pool=vp))
-        return cache, first_buf.at[slot].set(first[0]), first[0], rng
+        return cache, first_buf.at[slot].set(first[0]), first[0]
 
     def _copy_fn(self, cache, src_slots, src_pages, dst_slot, dst_pages):
         kp = cache["layers"]["k_pool"]
@@ -385,9 +420,10 @@ class DeviceState:
     def stage_admit(self, slot: int, length: int, row: np.ndarray,
                     n_pages: int, *, token: int = 0,
                     token_from_buf: bool = False,
-                    set_token: bool = False) -> None:
+                    set_token: bool = False, seed: int = 0) -> None:
         self._pending_admits.append(
-            (slot, length, row, n_pages, token, token_from_buf, set_token)
+            (slot, length, row, n_pages, token, token_from_buf, set_token,
+             seed)
         )
 
     def has_pending_chunk(self) -> bool:
@@ -415,7 +451,7 @@ class DeviceState:
 
     def stage_chunk(self, slot: int, tokens: np.ndarray, start: int,
                     row: np.ndarray, pages: np.ndarray, is_last: bool,
-                    last_index: int) -> None:
+                    last_index: int, seed: int = 0) -> None:
         """Stage one prefill chunk for the next fused dispatch.  At most
         one chunk rides per step (the scheduler's interleaving policy);
         ``tokens`` is always exactly ``chunk_tokens`` wide (the last chunk
@@ -424,13 +460,13 @@ class DeviceState:
         assert self._pending_chunk is None, "one chunk per fused step"
         self.chunk_shapes.add(len(tokens))
         self._pending_chunk = (slot, tokens, start, row, pages, is_last,
-                               last_index)
+                               last_index, seed)
 
     # ------------------------------------------------------------------
     # dispatch API
     # ------------------------------------------------------------------
     def prefill(self, tokens_np: np.ndarray, last_index: int, slot: int,
-                nb: int, pages) -> Any:
+                nb: int, pages, seed: int = 0) -> Any:
         """Bucketed fused prefill + KV load: ONE dispatch per classic
         admission.  Returns the first-token device scalar.
 
@@ -442,14 +478,14 @@ class DeviceState:
         S = tokens_np.shape[1]
         if S not in self._prefill_cache:
             self._prefill_cache[S] = jax.jit(
-                self._prefill_fn, donate_argnums=(1, 4, 5),
+                self._prefill_fn, donate_argnums=(1, 4),
             )
         padded = list(pages) + [0] * (S // self.block - nb)
-        self.cache, self.first_buf, first, self.rng = (
+        self.cache, self.first_buf, first = (
             self._prefill_cache[S](
                 self.params, self.cache, jnp.asarray(tokens_np),
                 jnp.asarray([last_index], jnp.int32), self.first_buf,
-                self.rng, np.int32(slot),
+                np.int32(seed), np.int32(slot),
                 jnp.asarray(padded, jnp.int32),
             )
         )
@@ -460,26 +496,49 @@ class DeviceState:
     # cluster-plane migration primitives (cold path: replicas own
     # separate device arrays, so cross-replica moves go through the host)
     # ------------------------------------------------------------------
+    def _page_move_bucket(self, n: int) -> int:
+        """Pow2 bucket for page-move index vectors.  Gather/scatter
+        programs are shape-keyed, so an unbucketed move compiles once
+        per distinct page count — a mid-request handoff of a new length
+        then stalls a whole cluster tick behind XLA.  Padding the index
+        vector to a pow2 bucket caps the cache at log2(pool) programs
+        per direction."""
+        b = 1
+        while b < n:
+            b <<= 1
+        self.page_move_buckets.add(b)
+        return b
+
     def read_pages(self, slot: int, pages) -> Tuple[np.ndarray, np.ndarray]:
         """Pull one slot's pages to host: (L, n, block, Hkv, D) k/v pair.
         Synchronous by design — migration is not the hot path, and the
         caller holds a cluster hold so the pages cannot be reclaimed."""
-        idx = jnp.asarray(pages, jnp.int32)
-        k = np.asarray(self.cache["layers"]["k_pool"][:, slot, idx])
-        v = np.asarray(self.cache["layers"]["v_pool"][:, slot, idx])
+        n = len(pages)
+        nb = self._page_move_bucket(n)
+        idx = jnp.asarray(list(pages) + [0] * (nb - n), jnp.int32)
+        k = np.asarray(self.cache["layers"]["k_pool"][:, slot, idx])[:, :n]
+        v = np.asarray(self.cache["layers"]["v_pool"][:, slot, idx])[:, :n]
         self.migration_dispatches += 1
         return k, v
 
     def write_pages(self, slot: int, pages, k: np.ndarray,
                     v: np.ndarray) -> None:
-        """Install host KV blocks into this replica's pages."""
-        idx = jnp.asarray(pages, jnp.int32)
+        """Install host KV blocks into this replica's pages.  The index
+        vector is padded to the pow2 bucket with scratch page 0 (and the
+        payload with zeros), so pad lanes write garbage to the scratch
+        page exactly like inactive-slot decode writes."""
+        n = len(pages)
+        nb = self._page_move_bucket(n)
+        idx = jnp.asarray(list(pages) + [0] * (nb - n), jnp.int32)
+        pad = [(0, 0), (0, nb - n)] + [(0, 0)] * (k.ndim - 2)
         kp = self.cache["layers"]["k_pool"]
         vp = self.cache["layers"]["v_pool"]
         self.cache = dict(self.cache, layers=dict(
             self.cache["layers"],
-            k_pool=kp.at[:, slot, idx].set(jnp.asarray(k, kp.dtype)),
-            v_pool=vp.at[:, slot, idx].set(jnp.asarray(v, vp.dtype)),
+            k_pool=kp.at[:, slot, idx].set(
+                jnp.asarray(np.pad(k, pad), kp.dtype)),
+            v_pool=vp.at[:, slot, idx].set(
+                jnp.asarray(np.pad(v, pad), vp.dtype)),
         ))
         self.migration_dispatches += 1
 
@@ -513,7 +572,7 @@ class DeviceState:
             for s in self._pending_resets:
                 reset_m[s] = 1
         admit_m = admit_len = admit_pages = zeros
-        admit_tok = admit_from_buf = admit_set_tok = zeros
+        admit_tok = admit_from_buf = admit_set_tok = admit_seed = zeros
         admit_row = self._zeros_row
         if self._pending_admits:
             admit_m = np.zeros((B,), np.int32)
@@ -523,8 +582,9 @@ class DeviceState:
             admit_tok = np.zeros((B,), np.int32)
             admit_from_buf = np.zeros((B,), np.int32)
             admit_set_tok = np.zeros((B,), np.int32)
-            for slot, length, row, n_pages, tok, from_buf, set_tok in (
-                    self._pending_admits):
+            admit_seed = np.zeros((B,), np.int32)
+            for (slot, length, row, n_pages, tok, from_buf, set_tok,
+                 seed) in self._pending_admits:
                 admit_m[slot] = 1
                 admit_len[slot] = length
                 admit_row[slot] = row
@@ -532,6 +592,7 @@ class DeviceState:
                 admit_tok[slot] = tok
                 admit_from_buf[slot] = 1 if from_buf else 0
                 admit_set_tok[slot] = 1 if set_tok else 0
+                admit_seed[slot] = seed
         tf_m = tf_vals = zeros
         if tf:
             tf_m = np.zeros((B,), np.int32)
@@ -547,11 +608,12 @@ class DeviceState:
         has_chunk = self._pending_chunk is not None
         ck_tokens = self._ck_zeros_toks
         ck_slot = ck_start = ck_last = ck_last_index = self._zero
+        ck_seed = self._zero
         ck_row = self._ck_zeros_row
         ck_pages = self._ck_zeros_pages
         if has_chunk:
             (c_slot, c_toks, c_start, c_row, c_pages, c_is_last,
-             c_last_index) = self._pending_chunk
+             c_last_index, c_seed) = self._pending_chunk
             ck_tokens = np.asarray(c_toks, np.int32)[None]
             ck_slot = np.int32(c_slot)
             ck_start = np.int32(c_start)
@@ -559,25 +621,26 @@ class DeviceState:
             ck_pages = np.asarray(c_pages, np.int32)
             ck_last = np.int32(1 if c_is_last else 0)
             ck_last_index = np.int32(c_last_index)
+            ck_seed = np.int32(c_seed)
         self.stage_ns += time.perf_counter_ns() - t0
 
         out = self._step(
             self.params, self.cache, self.tokens, self.lengths, self.table,
-            self.mask, self.pages, self.first_buf, self.rng, reset_m,
+            self.mask, self.pages, self.first_buf, self.seeds, reset_m,
             admit_m, admit_len, admit_row, admit_pages, admit_tok,
-            admit_from_buf, admit_set_tok, tf_m, tf_vals, cand, ck_tokens,
-            ck_slot, ck_start, ck_row, ck_pages, ck_last, ck_last_index,
-            n_kv, has_chunk,
+            admit_from_buf, admit_set_tok, admit_seed, tf_m, tf_vals, cand,
+            ck_tokens, ck_slot, ck_start, ck_row, ck_pages, ck_last,
+            ck_last_index, ck_seed, n_kv, has_chunk,
         )
         spec = None
         if self.speculate_k > 0:
             (self.tokens, self.cache, self.lengths, self.table, self.mask,
-             self.pages, self.first_buf, self.rng, chunk_first, v,
+             self.pages, self.first_buf, self.seeds, chunk_first, v,
              counts) = out
             spec = (v, counts)
         else:
             (self.tokens, self.cache, self.lengths, self.table, self.mask,
-             self.pages, self.first_buf, self.rng, chunk_first) = out
+             self.pages, self.first_buf, self.seeds, chunk_first) = out
         self._pending_resets.clear()
         self._pending_admits.clear()
         self._pending_chunk = None

@@ -100,6 +100,11 @@ class ServingEngine:
         self.replica_id = replica_id
         self.temperature = temperature
         self.top_p = top_p
+        # sampled mode: requests carry a per-request sample_key and the
+        # device derives every uniform as counter_uniform(key, position).
+        # sample_seed only salts the DEFAULT key derivation for requests
+        # submitted without one (the cluster assigns group-wide keys).
+        self.sample_seed = sample_seed
         # lifecycle plane: replay journal (duck-typed: any object with
         # record_submit/record_token/record_finish — the engine never
         # imports the cluster plane), fault-injection and drain state
@@ -163,6 +168,9 @@ class ServingEngine:
         self.admissions = 0  # requests admitted
         self.prefill_chunks = 0  # chunk-lane rides (chunked admissions)
         self.host_ns = 0  # host-side bookkeeping time in _dispatch_decode
+        self.busy_s = 0.0  # cumulative step() wall time: this replica's
+        # own busy clock — in a cluster the serial tick sums every
+        # replica's dispatches, so per-replica latency reads THIS clock
         self.backpressure_syncs = 0  # PoolExhausted -> force-sync events
         self.chunk_backpressure = 0  # ... of which mid chunked prefill
         # chunk-lane per-step state (consumed by _dispatch_decode)
@@ -173,6 +181,9 @@ class ServingEngine:
         self._next_group_id = 0
         self.cow_copies = 0  # partial prompt pages CoW-copied
         self.fork_admissions = 0  # branches admitted by page sharing
+        # tier plane: mid-request KV handoffs (prefill -> decode tier)
+        self.handoffs_out = 0  # requests exported after prefill here
+        self.handoffs_in = 0  # requests imported mid-request
         self.tokens_emitted = 0  # host-observed generated tokens
         self.spec_drafted = 0  # draft tokens offered to the verifier
         self.spec_accepted = 0  # ... accepted (bonus tokens beyond 1)
@@ -204,8 +215,16 @@ class ServingEngine:
     # public API
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> Request:
-        req = self.sched.submit(prompt, max_new_tokens, eos_id)
+               eos_id: Optional[int] = None,
+               sample_key: Optional[int] = None) -> Request:
+        if sample_key is None:
+            # standalone default: deterministic per-request key.  The
+            # cluster passes ROUTING-INDEPENDENT group-level keys instead
+            # so tiered/unified and fault/no-fault runs are comparable.
+            sample_key = ((self.sample_seed * 1_000_003
+                           + self.sched._next_rid) & 0x7FFFFFFF)
+        req = self.sched.submit(prompt, max_new_tokens, eos_id,
+                                sample_key=sample_key)
         if self.journal is not None:
             self.journal.record_submit(req, self.temperature, self.top_p)
         return req
@@ -318,6 +337,7 @@ class ServingEngine:
                 f"replica {self.replica_id} is crashed (fault injection)"
             )
         self.steps += 1
+        _t0 = time.time()
         # 1. retire the oldest in-flight step if the pipeline is full
         while self.sched.pipeline_full():
             self._complete_oldest()
@@ -337,6 +357,7 @@ class ServingEngine:
             self._dispatch_decode()
         elif self.sched.inflight:
             self._complete_oldest()
+        self.busy_s += time.time() - _t0
 
     def drain(self) -> None:
         while self.sched.inflight:
@@ -425,6 +446,94 @@ class ServingEngine:
         cluster hold they stay unreclaimed until it releases)."""
         return self.prefix_cache.remove(keys)
 
+    def export_request(self, slot: int) -> Optional[dict]:
+        """Tier plane, source side of the mid-request KV handoff: read a
+        parked prefill-done request's whole-prompt KV to host and free
+        its pages HERE.  The caller must hold a ClusterLedger hold owned
+        by this replica for the whole export->import window: the pages
+        retire now but stay pinned (retire-but-held) until the hold
+        releases after import — the paper's long-lived critical region,
+        at handoff granularity.
+
+        Token 1 (sampled on device by the final prefill chunk) is
+        emitted here, on the SOURCE, so journal replay after a source
+        death mid-handoff resumes from prompt + [token 1].  A request
+        whose budget or eos is satisfied by token 1 alone finishes here
+        and is not handed off (returns None)."""
+        sched = self.sched
+        req = sched.prefill_done[slot]
+        first_dev = req._first_dev  # type: ignore[attr-defined]
+        assert first_dev is not None, "export before final chunk dispatch"
+        t1 = int(jax.device_get(first_dev))
+        req._first_dev = None  # type: ignore[attr-defined]
+        self._emit(req, t1)
+        hit_eos = req.eos_id is not None and t1 == req.eos_id
+        if hit_eos or req.max_new_tokens <= 1:
+            self._finish(slot, req)
+            return None
+        refs = sched.slot_pages[slot]
+        assert all(r[0] == slot for r in refs), (
+            "handoff requests never share CoW pages"
+        )
+        pages = [p for (_, p) in refs]
+        k, v = self.dev.read_pages(slot, pages)
+        freed = sched.release_slot(slot)
+        self.pool.free_refs(freed)
+        self._refs_dirty = True
+        self.dev.stage_reset(slot)
+        self.handoffs_out += 1
+        return {
+            "req": req,
+            "prompt_len": len(req.prompt),
+            "token1": t1,
+            "k": k,
+            "v": v,
+            "n_pages": len(pages),
+            "src": self.replica_id,
+        }
+
+    def import_request(self, packet: dict) -> bool:
+        """Tier plane, destination side: install an exported request's
+        KV into this replica's pool and admit it straight into the
+        decode lane (the staged admit sets lengths = prompt_len and
+        teacher-forces token 1, so the next fused step decodes token 2).
+        The request continues under a fresh LOCAL rid and a NEW journal
+        entry carrying its already-emitted tokens — exactly the adopt()
+        requeue bookkeeping, which is what makes a death mid-handoff
+        replay cleanly.  Returns False (caller retries / re-routes) when
+        this replica has no free slot or pages."""
+        sched = self.sched
+        if not sched.free_slots or sched.admissions_paused:
+            return False
+        req: Request = packet["req"]
+        slot = sched.free_slots[-1]
+        try:
+            pages = self.pool.alloc(slot, packet["n_pages"])
+        except PoolExhausted:
+            return False
+        self.dev.write_pages(slot, pages, packet["k"], packet["v"])
+        req.rid = sched._next_rid
+        sched._next_rid += 1
+        req.replica = self.replica_id
+        gen = list(req.generated or [])  # bind_slot resets generated
+        sched.bind_slot(req, slot, pages, packet["prompt_len"])
+        req.generated = gen
+        req._tf_suffix = []  # type: ignore[attr-defined]
+        req._first_dev = None  # type: ignore[attr-defined]
+        self._refs_dirty = True
+        self.dev.stage_admit(slot, packet["prompt_len"],
+                             sched.block_table[slot], packet["n_pages"],
+                             token=packet["token1"], set_token=True,
+                             seed=int(req.sample_key or 0))
+        if self.journal is not None:
+            # record_submit journals the already-emitted prefix (token 1
+            # and any tokens served before a re-import), so a DST death
+            # later replays from prompt + emitted like any other request
+            self.journal.record_submit(req, self.temperature, self.top_p)
+        self.admissions += 1
+        self.handoffs_in += 1
+        return True
+
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
@@ -445,7 +554,12 @@ class ServingEngine:
         # replay only pays off for short suffixes; a long one takes the
         # full prefill, which rewrites EVERY page — copying the hit
         # pages first would be wasted work (and a second dispatch)
-        use_replay = bool(n_hit_tokens) and len(suffix) <= 2 * self.block
+        # handoff requests must finish prefill in the chunk lane (the
+        # tier plane parks them at the final chunk), so they skip the
+        # replay admission path
+        use_replay = (bool(n_hit_tokens)
+                      and len(suffix) <= 2 * self.block
+                      and not req.handoff)
         if use_replay:
             # short suffix after a cache hit: teacher-force through decode
             try:
@@ -463,7 +577,8 @@ class ServingEngine:
             self.sched.bind_slot(req, slot, pages, n_hit_tokens)
             req._tf_suffix = list(suffix)  # type: ignore[attr-defined]
             self.dev.stage_admit(slot, n_hit_tokens,
-                                 self.sched.block_table[slot], n_blocks)
+                                 self.sched.block_table[slot], n_blocks,
+                                 seed=int(req.sample_key or 0))
             self.admissions += 1
             return True
         self.prefix_cache.unpin(hits)
@@ -500,7 +615,8 @@ class ServingEngine:
         pad = S - len(prompt)
         toks = np.asarray(prompt + [0] * pad, np.int32)[None]
         first_dev = self.dev.prefill(toks, len(prompt) - 1, slot,
-                                     n_blocks, pages)
+                                     n_blocks, pages,
+                                     seed=int(req.sample_key or 0))
         # token 1 stays on device (in the prefill first-token buffer,
         # which the fused step reads); the host materializes it at
         # the first pipeline-lagged completion for this request
@@ -509,7 +625,8 @@ class ServingEngine:
         req._tf_suffix = []  # type: ignore[attr-defined]
         self.dev.stage_admit(slot, len(prompt),
                              self.sched.block_table[slot], n_blocks,
-                             token_from_buf=True, set_token=True)
+                             token_from_buf=True, set_token=True,
+                             seed=int(req.sample_key or 0))
         self.admissions += 1
         return True
 
@@ -580,13 +697,15 @@ class ServingEngine:
             # admit token as well would double-advance on admit day
             req._tf_suffix = list(sfx)  # type: ignore[attr-defined]
             self.dev.stage_admit(slot, g.prefix_len,
-                                 self.sched.block_table[slot], len(refs))
+                                 self.sched.block_table[slot], len(refs),
+                                 seed=int(req.sample_key or 0))
         else:
             tok = g.first_token
             req._tf_suffix = []  # type: ignore[attr-defined]
             self.dev.stage_admit(slot, g.prefix_len,
                                  self.sched.block_table[slot], len(refs),
-                                 token=tok, set_token=True)
+                                 token=tok, set_token=True,
+                                 seed=int(req.sample_key or 0))
         self.admissions += 1
         self.fork_admissions += 1
         if not sfx:
@@ -644,24 +763,37 @@ class ServingEngine:
         last_index = (P - 1 - start) if is_last else (C - 1)
         self.dev.stage_chunk(slot, toks, start,
                              sched.block_table[slot].copy(), write_pages,
-                             is_last, last_index)
+                             is_last, last_index,
+                             seed=int(req.sample_key or 0))
         self._chunk_need_pages = need
         req.chunk_pos = end
         self.prefill_chunks += 1
         if is_last:
-            # prompt fully staged: promote to the decode lane.  The admit
-            # below applies in the SAME dispatch as the final chunk —
-            # the chunk lane runs first and leaves token 1 in first_buf,
-            # so this step already decodes token 2.  One dispatch.
-            sched.promote(slot, P)
-            self.dev.stage_admit(slot, P, sched.block_table[slot],
-                                 req.n_pages, token_from_buf=True,
-                                 set_token=True)
             self._chunk_finalizing = req
             hold = getattr(req, "_chunk_hold", None)
             if hold is not None:
                 hold.release()
                 req._chunk_hold = None  # type: ignore[attr-defined]
+            if req.handoff:
+                # disaggregated prefill: the final chunk still rides this
+                # dispatch (token 1 lands in first_buf -> _first_dev via
+                # _chunk_finalizing), but the slot is NOT promoted to the
+                # decode lane — it parks in prefill_done until the tier
+                # plane exports its KV pages to a decode replica.  Device
+                # lengths/mask for the slot stay 0, so the fused step
+                # never decodes it here.
+                sched.park_prefill_done(slot)
+            else:
+                # prompt fully staged: promote to the decode lane.  The
+                # admit below applies in the SAME dispatch as the final
+                # chunk — the chunk lane runs first and leaves token 1 in
+                # first_buf, so this step already decodes token 2.  One
+                # dispatch.
+                sched.promote(slot, P)
+                self.dev.stage_admit(slot, P, sched.block_table[slot],
+                                     req.n_pages, token_from_buf=True,
+                                     set_token=True,
+                                     seed=int(req.sample_key or 0))
         return True
 
     def _alloc_chunk_pages(self, slot: int, req: Request,
@@ -859,6 +991,8 @@ class ServingEngine:
         """Host-observed token emission: the ONLY place generated tokens
         appear, so the replay journal can never miss one."""
         req.generated.append(tok)
+        req.token_times.append(time.time())
+        req.token_busy.append(self.busy_s)
         self.tokens_emitted += 1
         if (req.group is not None and req.branch_idx == 0
                 and req.group.first_token is None):
@@ -944,6 +1078,10 @@ class ServingEngine:
             "forks_released": self.pool.forks_released,
             "cow_copies": self.cow_copies,
             "fork_admissions": self.fork_admissions,
+            # tier plane
+            "handoffs_out": self.handoffs_out,
+            "handoffs_in": self.handoffs_in,
+            "prefill_ready": len(self.sched.prefill_done),
             # speculative-decode lane
             "speculate_k": self.speculate_k,
             "spec_drafted": self.spec_drafted,

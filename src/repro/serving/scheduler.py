@@ -37,6 +37,21 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: float = 0.0  # host observed token 1 (TTFT numerator)
     finished_at: float = 0.0
+    # per-token host-observed emit times (ITL = consecutive deltas);
+    # spans replicas for a handed-off request
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # per-token snapshot of the EMITTING replica's busy clock
+    # (engine.busy_s): inter-token deltas on one replica measure its own
+    # serving cadence even though the in-process cluster ticks replicas
+    # serially — the deployment-faithful ITL for tier comparisons
+    token_busy: List[float] = dataclasses.field(default_factory=list)
+    # sampled mode: the journaled RNG key — the u that samples the token
+    # at sequence index pos is counter_uniform(sample_key, pos), so any
+    # replica resumes the stream bit-identically (replay, KV handoff)
+    sample_key: Optional[int] = None
+    # tier plane: stop at prefill completion and park in prefill_done
+    # for the TierManager to hand off to a decode replica
+    handoff: bool = False
     # copy-on-write fork state: branches of a ForkGroup share the
     # parent's full prompt pages instead of re-prefilling them
     group: Optional["ForkGroup"] = None
@@ -114,6 +129,12 @@ class Scheduler:
         # its pages are referenced by chunk steps, but it takes no part
         # in the decode lane until its final chunk promotes it to active
         self.admitting: Dict[int, Request] = {}
+        # slot -> handoff-marked request whose prefill completed: the KV
+        # for the whole prompt is on device, token 1 is in first_buf, and
+        # the slot never enters the decode lane — it parks here (the
+        # group-level ready queue's source) until the TierManager exports
+        # it to a decode replica
+        self.prefill_done: Dict[int, Request] = {}
         self.finished: List[Request] = []
         self.free_slots: List[int] = list(range(max_slots))
         # lifecycle plane: a draining replica stops admitting (waiting
@@ -140,10 +161,12 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int,
-               eos_id: Optional[int]) -> Request:
+               eos_id: Optional[int],
+               sample_key: Optional[int] = None) -> Request:
         req = Request(self._next_rid, list(map(int, prompt)),
                       max_new_tokens, eos_id)
         req.replica = self.replica_id
+        req.sample_key = sample_key
         req.submitted_at = time.time()
         self._next_rid += 1
         self.waiting.append(req)
@@ -151,7 +174,7 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.active or self.admitting
-                    or self.inflight)
+                    or self.prefill_done or self.inflight)
 
     def take_waiting(self) -> List[Request]:
         """Drain helper: hand the not-yet-admitted queue back to the
@@ -175,7 +198,7 @@ class Scheduler:
     def queue_depth(self) -> int:
         """Router load signal: requests not yet fully served here."""
         return (len(self.waiting) + len(self.active) + len(self.admitting)
-                + len(self.inflight))
+                + len(self.prefill_done) + len(self.inflight))
 
     def pending_prefill_pages(self) -> int:
         """Pages this scheduler is already committed to allocating: the
@@ -262,14 +285,27 @@ class Scheduler:
         self.active[slot] = req
         return req
 
+    def park_prefill_done(self, slot: int) -> Request:
+        """Tier plane: final chunk staged for a HANDOFF request — the
+        slot leaves the admitting set but never joins the decode lane.
+        Its pages (whole-prompt KV) stay referenced until export; lengths
+        mirror stays 0, matching the device (no admit was staged)."""
+        req = self.admitting.pop(slot)
+        self.prefill_done[slot] = req
+        return req
+
     def release_slot(self, slot: int) -> List[Tuple[int, int]]:
         """Finish bookkeeping: returns the (owner_slot, page) refs the
-        slot held — own pages AND any CoW-shared parent pages."""
+        slot held — own pages AND any CoW-shared parent pages.  Works on
+        active slots and on parked prefill-done slots (handoff export)."""
         refs = self.slot_pages[slot]
         self.slot_pages[slot] = []
         self.block_table[slot] = 0
         self.lengths[slot] = 0
-        del self.active[slot]
+        if slot in self.active:
+            del self.active[slot]
+        else:
+            del self.prefill_done[slot]
         self.free_slots.append(slot)
         return refs
 
@@ -286,7 +322,7 @@ class Scheduler:
         protects shared pages for the step's whole in-flight window."""
         return [
             ref
-            for slots in (self.active, self.admitting)
+            for slots in (self.active, self.admitting, self.prefill_done)
             for slot in slots
             for ref in self.slot_pages[slot]
         ]

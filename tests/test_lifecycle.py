@@ -353,6 +353,41 @@ def test_double_fault_rechains_replay(model, reference):
     assert group.shards.unreclaimed() == 0
 
 
+def test_sampled_replay_resumes_token_for_token(model):
+    """Sampled requests are no longer a replay special case: the group
+    journals each request's sample key, counter sampling makes the
+    uniform for sequence index pos a pure function of (key, pos), and a
+    survivor resumes the stream mid-flight bit-identically — the
+    stitched emitted + replayed stream equals a no-fault run at
+    temperature 0.8."""
+
+    def run(kill):
+        group = ReplicaGroup(model, 3, router="round-robin", max_slots=2,
+                             max_seq=MAX_SEQ, pipeline_depth=2,
+                             extra_pages_per_slot=4, temperature=0.8)
+        mgr = LifecycleManager(group, heartbeat_timeout=2)
+        reqs = [group.submit(p, max_new_tokens=6) for p in PROMPTS]
+        for _ in range(4):
+            group.step()
+        if kill:
+            group.kill_replica(0)
+        group.run_until_done()
+        group.drain()
+        assert group.shards.unreclaimed() == 0
+        return [list(r.generated) for r in reqs], mgr
+
+    ref, _ = run(kill=False)
+    got, mgr = run(kill=True)
+    assert mgr.dead == {0}
+    assert mgr.replays_submitted >= 1
+    assert mgr.replays_finished == mgr.replays_submitted
+    # the resume was genuinely mid-stream (tokens were already emitted
+    # and journaled before the crash), not a restart-from-scratch
+    assert any(e.emitted for _, _, e in mgr.replays)
+    assert all(not e.greedy and e.resumable for _, _, e in mgr.replays)
+    assert got == ref
+
+
 def test_drain_replica_requeues_untracked_replay(model, reference):
     """A lifecycle replay waiting (un-admitted) on a replica must
     survive that replica being drained, even though replays are not
