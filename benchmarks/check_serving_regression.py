@@ -40,6 +40,19 @@ Gates, in order:
      at the pre-hold baseline) must be present and within the recorded
      gate (heartbeat timeout + slack), and forced hold expiry must have
      actually fired; an absent file/section is a SKIP.
+  8. **robustness** — if ``BENCH_robustness.json`` exists
+     (``benchmarks/robustness_bench.py``): under an indefinitely parked
+     hold, every gated row must be bounded — hyaline/crystalline peak
+     unreclaimed within the O(slots x batch) footprint bound with
+     traffic still flowing, stamp-it + hold-age watchdog within the
+     analytic deadline-window bound (a constant factor over the robust
+     bound) with the watchdog having actually fired and full recovery
+     after — and all three gated scenarios must be present; schemes
+     with ``"gate": null`` are documented-unbounded and SKIPped.
+
+``--strict`` turns every SKIP above (absent file or section) into a
+FAIL — CI wires it on the bench-gate job so a silently missing section
+can never pass again.
 
 ``BENCH_serving.json`` may be the PR 2 era bare list (treated as the
 ``policies`` section) or the current ``{"policies", "sweep"}`` dict.
@@ -57,6 +70,7 @@ throughput gate on noisy shared runners.
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -67,7 +81,22 @@ from .fault_bench import (
     DEFAULT_HEARTBEAT_TIMEOUT,
     UNBLOCK_SLACK_STEPS,
 )
+from .robustness_bench import BENCH_ROBUSTNESS_JSON
 from .serving_bench import BENCH_JSON, run
+
+#: set by --strict: an absent bench file/section FAILS instead of SKIPs
+STRICT = False
+
+
+def _skip(msg: str) -> int:
+    """An expected-but-absent section: tolerated by default (stacked
+    PRs land sections incrementally), a loud failure under --strict
+    (CI's bench-gate job, where every section must exist)."""
+    if STRICT:
+        print(f"FAIL (strict): {msg}")
+        return 1
+    print(f"SKIP: {msg}")
+    return 0
 
 
 def _load_serving_baseline():
@@ -103,9 +132,9 @@ def _check_throughput(baseline) -> int:
 def _check_sweep(baseline) -> int:
     sweep = baseline.get("sweep")
     if not sweep:
-        print("SKIP: no 'sweep' section in baseline (run "
-              "`serving_bench --sweep pipeline_depth,slots` to add one)")
-        return 0
+        return _skip("no 'sweep' section in baseline (run "
+                     "`serving_bench --sweep pipeline_depth,slots` "
+                     "to add one)")
     bad = [r for r in sweep
            if r.get("dispatches_per_step") != 1.0
            or "pipeline_depth" not in r or "slots" not in r
@@ -122,9 +151,8 @@ def _check_sweep(baseline) -> int:
 def _check_long_prompt(baseline) -> int:
     rows = baseline.get("long_prompt")
     if not rows:
-        print("SKIP: no 'long_prompt' section in baseline (run "
-              "`serving_bench --long-prompt` to add one)")
-        return 0
+        return _skip("no 'long_prompt' section in baseline (run "
+                     "`serving_bench --long-prompt` to add one)")
     gate = float(os.environ.get("TTFT_FLATNESS_GATE", "3.0"))
     chunked = [r for r in rows if r.get("mode") == "chunked"]
     bad = [r for r in chunked
@@ -138,9 +166,8 @@ def _check_long_prompt(baseline) -> int:
     vals = {r["long_prompt_tokens"]: r["short_ttft_p99_ms"]
             for r in chunked if r.get("policy") == "stamp-it"}
     if len(vals) < 2:
-        print("SKIP: long_prompt section has < 2 stamp-it chunked "
-              "prompt lengths")
-        return 0
+        return _skip("long_prompt section has < 2 stamp-it chunked "
+                     "prompt lengths")
     ratio = max(vals.values()) / max(min(vals.values()), 1e-9)
     print(f"stamp-it chunked short-request p99 TTFT by long-prompt "
           f"tokens: {dict(sorted(vals.items()))} ms -> "
@@ -157,9 +184,9 @@ def _check_long_prompt(baseline) -> int:
 def _check_cow(baseline) -> int:
     rows = baseline.get("cow")
     if not rows:
-        print("SKIP: no 'cow' section in baseline (run "
-              "`serving_bench --best-of 4 --speculate 4` to add one)")
-        return 0
+        return _skip("no 'cow' section in baseline (run "
+                     "`serving_bench --best-of 4 --speculate 4` "
+                     "to add one)")
     bad = []
     for r in rows:
         n = r.get("best_of", 0)
@@ -198,9 +225,8 @@ def _check_cow(baseline) -> int:
 def _check_disagg(baseline) -> int:
     rows = baseline.get("disagg")
     if not rows:
-        print("SKIP: no 'disagg' section in baseline (run "
-              "`python -m benchmarks.disagg_bench` to add one)")
-        return 0
+        return _skip("no 'disagg' section in baseline (run "
+                     "`python -m benchmarks.disagg_bench` to add one)")
     bad = []
     # ITL flatness: tiered short-request decode p99 under injection
     itl_gate = float(os.environ.get("ITL_FLATNESS_GATE", "1.5"))
@@ -269,21 +295,19 @@ def _check_disagg(baseline) -> int:
 
 def _check_cluster() -> int:
     if not BENCH_CLUSTER_JSON.exists():
-        print("SKIP: no BENCH_cluster.json (run "
-              "`python -m benchmarks.cluster_bench` to add the cluster "
-              "baseline)")
-        return 0
+        return _skip("no BENCH_cluster.json (run "
+                     "`python -m benchmarks.cluster_bench` to add the "
+                     "cluster baseline)")
     data = json.loads(BENCH_CLUSTER_JSON.read_text())
     rows = data.get("cluster")
     if not rows:
-        print("SKIP: BENCH_cluster.json has no 'cluster' section")
-        return 0
+        return _skip("BENCH_cluster.json has no 'cluster' section")
     gate = float(data.get("flatness_gate", FLATNESS_GATE))
     vals = {r["replicas"]: r["scan_steps_per_step"] for r in rows
             if r.get("policy") == "stamp-it"}
     if len(vals) < 2:
-        print("SKIP: cluster section has < 2 stamp-it replica counts")
-        return 0
+        return _skip("cluster section has < 2 stamp-it replica "
+                     "counts")
     ratio = max(vals.values()) / max(min(vals.values()), 1e-9)
     print(f"stamp-it cluster scan-steps/step by replicas: "
           f"{dict(sorted(vals.items()))} -> max/min={ratio:.3f} "
@@ -299,15 +323,13 @@ def _check_cluster() -> int:
 
 def _check_fault() -> int:
     if not BENCH_FAULT_JSON.exists():
-        print("SKIP: no BENCH_fault.json (run "
-              "`python -m benchmarks.fault_bench` to add the fault-"
-              "recovery baseline)")
-        return 0
+        return _skip("no BENCH_fault.json (run "
+                     "`python -m benchmarks.fault_bench` to add the "
+                     "fault-recovery baseline)")
     data = json.loads(BENCH_FAULT_JSON.read_text())
     rows = data.get("fault")
     if not rows:
-        print("SKIP: BENCH_fault.json has no 'fault' section")
-        return 0
+        return _skip("BENCH_fault.json has no 'fault' section")
     gate = int(data.get("unblock_gate_steps",
                         DEFAULT_HEARTBEAT_TIMEOUT + UNBLOCK_SLACK_STEPS))
     bad = []
@@ -329,7 +351,63 @@ def _check_fault() -> int:
     return 0
 
 
-def main() -> int:
+def _check_robustness() -> int:
+    if not BENCH_ROBUSTNESS_JSON.exists():
+        return _skip("no BENCH_robustness.json (run "
+                     "`python -m benchmarks.robustness_bench` to add "
+                     "the stalled-thread memory-bound baseline)")
+    data = json.loads(BENCH_ROBUSTNESS_JSON.read_text())
+    rows = data.get("robustness")
+    if not rows:
+        return _skip("BENCH_robustness.json has no 'robustness' section")
+    gated = {r["policy"]: r for r in rows if r.get("gate")}
+    required = ("hyaline", "crystalline", "stamp-it+watchdog")
+    bad = [(p, "gated scenario missing from baseline")
+           for p in required if p not in gated]
+    for p, r in gated.items():
+        bound = r.get("bound_pages")
+        if bound is None or r.get("peak_unreclaimed", 1 << 30) > bound:
+            bad.append((p, f"peak_unreclaimed="
+                        f"{r.get('peak_unreclaimed')} > bound={bound}"))
+        elif r.get("tail_peak_unreclaimed", 1 << 30) > bound:
+            bad.append((p, f"tail grew past the bound "
+                        f"({r.get('tail_peak_unreclaimed')} > {bound})"))
+        elif r.get("time_to_bound") is None:
+            bad.append((p, "never recovered into the bound"))
+        elif not r.get("cycles_post_stall"):
+            bad.append((p, "traffic halted after the stall"))
+        elif (r.get("gate") == "watchdog"
+              and not r.get("hold_expired_by_watchdog")):
+            bad.append((p, "watchdog never force-expired the hold"))
+    shown = {r["policy"]: (r.get("peak_unreclaimed"),
+                           r.get("bound_pages")) for r in rows}
+    print(f"stalled-hold (peak unreclaimed, bound) by policy: {shown}")
+    if bad:
+        print(f"FAIL: robustness rows out of gate: {bad} — a parked "
+              f"hold must leave hyaline/crystalline memory bounded by "
+              f"the stall-time footprint and the watchdog must recover "
+              f"stamp-it within the deadline window")
+        return 1
+    undocd = [r["policy"] for r in rows
+              if not r.get("gate") and not r.get("note")]
+    if undocd:
+        print(f"FAIL: ungated robustness rows missing their "
+              f"documented-unbounded note: {undocd}")
+        return 1
+    print(f"OK: all {len(gated)} gated robustness rows bounded "
+          f"({len(rows) - len(gated)} unbounded schemes documented, "
+          f"not gated)")
+    return 0
+
+
+def main(argv=None) -> int:
+    global STRICT
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strict", action="store_true",
+                    help="fail (instead of skipping) when an expected "
+                         "bench file or section is absent")
+    args = ap.parse_args(argv)
+    STRICT = args.strict
     if not BENCH_JSON.exists():
         print(f"FAIL: no baseline at {BENCH_JSON}; run "
               f"`python -m benchmarks.serving_bench` and commit it")
@@ -353,7 +431,10 @@ def main() -> int:
     rc = _check_cluster()
     if rc:
         return rc
-    return _check_fault()
+    rc = _check_fault()
+    if rc:
+        return rc
+    return _check_robustness()
 
 
 if __name__ == "__main__":

@@ -411,6 +411,48 @@ def disagg_table():
     return "\n".join(lines)
 
 
+def robustness_table():
+    """Memory plane: stalled-thread memory bound per policy.  A hold is
+    parked mid-traffic and never released; peak unreclaimed pages is the
+    metric the robust schemes (hyaline, crystalline) bound at
+    O(slots x batch), the hold-age watchdog bounds for stamp-it within a
+    deadline-window constant factor, and the remaining schemes cannot
+    bound at all (the pool runs dry)."""
+    f = Path(__file__).parent.parent / "BENCH_robustness.json"
+    if not f.exists():
+        return ("(no BENCH_robustness.json — run "
+                "benchmarks/robustness_bench.py)")
+    data = json.loads(f.read_text())
+    rows = data.get("robustness") or []
+    if not rows:
+        return "(BENCH_robustness.json has no robustness rows)"
+    lines = [
+        "| policy | peak unreclaimed | bound | time to bound | "
+        "backpressure | cycles post-stall | watchdog expiries | gate |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"footprint": 0, "watchdog": 1, None: 2}
+    for r in sorted(rows, key=lambda x: (order.get(x.get("gate"), 3),
+                                         x["policy"])):
+        bound = r.get("bound_pages")
+        ttb = r.get("time_to_bound")
+        lines.append(
+            f"| {r['policy']} | {r['peak_unreclaimed']} | "
+            f"{'—' if bound is None else bound} | "
+            f"{'—' if ttb is None else ttb} | "
+            f"{r['backpressure_events']} | {r['cycles_post_stall']} | "
+            f"{r['hold_expired_by_watchdog']} | "
+            f"{r.get('gate') or 'none (documented unbounded)'} |")
+    lines.append(
+        f"\nGate (check_serving_regression.py): hyaline/crystalline peak "
+        f"stays within footprint-at-stall + "
+        f"{data.get('bound_slack_batches', '?')} batch/slot of slack "
+        f"with traffic still flowing; stamp-it+watchdog recovers within "
+        f"the {data.get('watchdog_deadline', '?')}-tick deadline window. "
+        f"Ten-scheme semantics: docs/reclamation_policies.md.")
+    return "\n".join(lines)
+
+
 def _section(title, fn):
     """Render one report section; missing results JSONs degrade to a
     note instead of aborting the whole report."""
@@ -440,6 +482,8 @@ def main():
              cluster_table)
     _section("Lifecycle plane: replica kill, forced expiry, replay",
              fault_table)
+    _section("Robustness: stalled-thread memory bound (parked hold)",
+             robustness_table)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,8 @@ See docs/cluster_serving.md.  Composition:
     entering every replica's stamp domain, with owner attribution and
     forced expiry (ledger.py);
   * :class:`LifecycleManager` — heartbeats, shared-fate hold expiry for
-    dead replicas, request replay (lifecycle.py);
+    dead replicas, request replay, plus the optional
+    :class:`HoldWatchdog` hold-age escalation (lifecycle.py);
   * :class:`RequestJournal` — the per-replica replay log (journal.py);
   * routers — round-robin / least-loaded / prefix-affinity over the
     live replicas (router.py);
@@ -21,7 +22,7 @@ See docs/cluster_serving.md.  Composition:
 from .group import ReplicaGroup
 from .journal import JournalEntry, RequestJournal
 from .ledger import ClusterHold, ClusterLedger
-from .lifecycle import LifecycleManager
+from .lifecycle import HoldWatchdog, LifecycleManager
 from .migration import migrate_prefix, prefix_keys
 from .router import (
     ROUTERS,
@@ -35,6 +36,7 @@ from .tiers import HANDOFF_TAG, HandoffPacket, TierManager
 
 __all__ = [
     "ReplicaGroup", "ClusterLedger", "ClusterHold", "LifecycleManager",
+    "HoldWatchdog",
     "RequestJournal", "JournalEntry", "Router",
     "RoundRobinRouter", "LeastLoadedRouter", "PrefixAffinityRouter",
     "ROUTERS", "make_router", "migrate_prefix", "prefix_keys",

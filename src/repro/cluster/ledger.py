@@ -144,6 +144,11 @@ class ClusterLedger:
     def open_holds_of(self, owner: Optional[int]) -> List[ClusterHold]:
         return [h for h in self._open if h.owner == owner]
 
+    def iter_open(self) -> List[ClusterHold]:
+        """Snapshot of every open hold, any owner — what the lifecycle
+        plane's hold-age watchdog sweeps each tick."""
+        return list(self._open)
+
     def force_expire_owner(self, owner: int) -> int:
         """Shared-fate expiry: revoke every open hold owned by a dead
         replica's actors, unblocking reclamation in EVERY domain the

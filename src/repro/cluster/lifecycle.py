@@ -42,15 +42,96 @@ remote cluster manager would see it.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..serving.scheduler import Request
 from .journal import JournalEntry
 
 
+class HoldWatchdog:
+    """Hold-AGE escalation: deadline -> warn -> force-expire.
+
+    Heartbeat death catches a replica that stops *stepping*; it cannot
+    catch a replica that keeps beating while an actor on it sits wedged
+    inside a hold — the live-but-stalled thread of the paper's weakness,
+    which pins pages in every domain the hold entered.  The watchdog
+    sweeps a set of open holds each tick, tracks each hold's age, WARNS
+    once past ``warn_after`` ticks (``hold_warnings``) and force-expires
+    past ``expire_after`` (``hold_expired_by_watchdog``) through the
+    hold's native forced path — so a wedged actor degrades to a revoked
+    pin instead of unbounded unreclaimed growth.
+
+    Works over :class:`~repro.cluster.ledger.ClusterHold` objects (which
+    force-release themselves) and bare
+    :class:`~repro.memory.policy.PolicyHold` parts (forced through their
+    policy); the caller supplies the open-hold snapshot each tick, so
+    the same watchdog serves the cluster ledger, a single pool, or the
+    robustness bench's stall injector."""
+
+    def __init__(self, *, expire_after: int, warn_after: Optional[int] =
+                 None, exempt_tags: Sequence[str] = ()) -> None:
+        if expire_after < 1:
+            raise ValueError("expire_after must be >= 1 tick")
+        self.expire_after = expire_after
+        self.warn_after = (max(1, expire_after // 2)
+                           if warn_after is None else warn_after)
+        if not 1 <= self.warn_after <= expire_after:
+            raise ValueError("need 1 <= warn_after <= expire_after")
+        self._exempt = set(exempt_tags)
+        self.ticks = 0
+        self.hold_warnings = 0
+        self.hold_expired_by_watchdog = 0
+        #: (tag, age) at each warning — observability for the report
+        self.warnings: List[Tuple[str, int]] = []
+        self._first_seen: Dict[Any, int] = {}  # hold -> tick first seen
+        self._warned: Set[Any] = set()
+
+    @staticmethod
+    def _force(hold) -> None:
+        if hasattr(hold, "force_release"):  # ClusterHold
+            hold.force_release()
+        else:  # bare PolicyHold: forced through its owning policy
+            hold._policy.force_release(hold)
+
+    def tick(self, open_holds) -> int:
+        """Sweep one tick over ``open_holds``; returns #holds expired."""
+        self.ticks += 1
+        expired = 0
+        for h in open_holds:
+            if h.released or h.tag in self._exempt:
+                continue
+            first = self._first_seen.setdefault(h, self.ticks)
+            age = self.ticks - first
+            if age >= self.warn_after and h not in self._warned:
+                self._warned.add(h)
+                self.hold_warnings += 1
+                self.warnings.append((h.tag, age))
+            if age >= self.expire_after:
+                self._force(h)
+                self.hold_expired_by_watchdog += 1
+                expired += 1
+        # drop tracking for holds that closed (any path)
+        for h in [h for h in self._first_seen if h.released]:
+            del self._first_seen[h]
+            self._warned.discard(h)
+        return expired
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "ticks": self.ticks,
+            "warn_after": self.warn_after,
+            "expire_after": self.expire_after,
+            "hold_warnings": self.hold_warnings,
+            "hold_expired_by_watchdog": self.hold_expired_by_watchdog,
+            "tracked": len(self._first_seen),
+        }
+
+
 class LifecycleManager:
     def __init__(self, group, *, heartbeat_timeout: int = 4,
-                 replay: bool = True) -> None:
+                 replay: bool = True,
+                 hold_deadline: Optional[int] = None,
+                 hold_warn_after: Optional[int] = None) -> None:
         if heartbeat_timeout < 1:
             raise ValueError("heartbeat_timeout must be >= 1 cluster step")
         self.group = group
@@ -78,6 +159,13 @@ class LifecycleManager:
         #: was lost) — recovered from the journal with NO re-admission
         self.replays_recovered = 0
         self.deaths: List[Tuple[int, int]] = []  # (tick, replica)
+        #: optional hold-AGE escalation over the group's cluster ledger
+        #: (heartbeats catch a replica that stops stepping; the watchdog
+        #: catches one that keeps beating with a wedged hold open)
+        self.watchdog: Optional[HoldWatchdog] = (
+            None if hold_deadline is None
+            else HoldWatchdog(expire_after=hold_deadline,
+                              warn_after=hold_warn_after))
         for i in group.live_ids():
             self.watch(i)
         group.lifecycle = self
@@ -181,6 +269,9 @@ class LifecycleManager:
         for i in sorted(self._watched - self.dead):
             if self.stale(i) >= self.timeout:
                 self.on_death(i)
+        if self.watchdog is not None:
+            if self.watchdog.tick(g.ledger.iter_open()):
+                g.reclaim()  # expired pins: freed pages land now
         self._stitch()
 
     # ------------------------------------------------------------------
@@ -278,4 +369,10 @@ class LifecycleManager:
             "replays_submitted": self.replays_submitted,
             "replays_finished": self.replays_finished,
             "replays_recovered": self.replays_recovered,
+            "hold_warnings": (
+                0 if self.watchdog is None
+                else self.watchdog.hold_warnings),
+            "hold_expired_by_watchdog": (
+                0 if self.watchdog is None
+                else self.watchdog.hold_expired_by_watchdog),
         }

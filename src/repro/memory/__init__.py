@@ -2,8 +2,11 @@ from .block_pool import BlockPool, PoolExhausted, ShardedPoolSet
 from .policy import (
     PAPER_POLICIES,
     POLICIES,
+    ROBUST_POLICIES,
     CoreSchemeAdapter,
+    CrystallinePolicy,
     EpochPolicy,
+    HyalinePolicy,
     PolicyHold,
     ReclamationPolicy,
     RefcountPolicy,
@@ -12,6 +15,7 @@ from .policy import (
     make_policy,
 )
 from .prefix_cache import PrefixCache, block_key, prefix_block_keys
+from .stall import StallInjector
 from .stamp_ledger import StampLedger
 
 __all__ = [
@@ -19,5 +23,7 @@ __all__ = [
     "block_key", "prefix_block_keys", "StampLedger",
     "ReclamationPolicy", "PolicyHold",
     "StampItPolicy", "EpochPolicy", "ScanPolicy", "RefcountPolicy",
-    "CoreSchemeAdapter", "POLICIES", "PAPER_POLICIES", "make_policy",
+    "HyalinePolicy", "CrystallinePolicy", "CoreSchemeAdapter",
+    "StallInjector",
+    "POLICIES", "PAPER_POLICIES", "ROBUST_POLICIES", "make_policy",
 ]

@@ -9,7 +9,8 @@ lists and exposes the step/retire lifecycle, exactly as the paper's data
 structures are written once against the Robison interface and
 parameterized by the reclaimer (see :mod:`repro.memory.policy` for the
 full registry: stamp-it, epoch, new-epoch, hazard, interval, qsr, debra,
-lfrc, plus the native scan/refcount analogues).
+lfrc, the robust hyaline/crystalline pair, plus the native
+scan/refcount analogues).
 """
 
 from __future__ import annotations
@@ -133,11 +134,17 @@ class BlockPool:
             if len(free) >= n:
                 pages = [free.pop() for _ in range(n)]
                 self.reused_total += n
-                return pages
-            shortfall = len(free)
-        # the unreclaimed() probe takes the POLICY's lock — do it outside
-        # the pool lock (a concurrent retire runs policy-lock -> pool-lock
-        # via the release callback; nesting the other way would deadlock)
+            else:
+                pages = None
+                shortfall = len(free)
+        # both policy probes below take the POLICY's lock — do them
+        # outside the pool lock (a concurrent retire runs policy-lock ->
+        # pool-lock via the release callback; nesting the other way
+        # would deadlock)
+        if pages is not None:
+            # birth-era stamp for the robust policies (no-op elsewhere)
+            self.policy.note_alloc(slot, pages)
+            return pages
         raise PoolExhausted(
             f"slot {slot}: need {n} pages, {shortfall} free "
             f"({self.unreclaimed()} awaiting reclamation)"

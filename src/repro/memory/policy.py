@@ -11,6 +11,11 @@ concrete policy:
   * native device-plane policies, tuned to the single-issuer dispatch
     loop — ``stamp-it`` (StampLedger), ``epoch`` (ER-analogue), ``scan``
     (HP-analogue), ``refcount`` (LFRC-analogue);
+  * native ROBUST policies — ``hyaline`` (per-batch distributed
+    reference counts, arXiv:1905.07903) and ``crystalline`` (wait-free
+    slot-local limbo lists, arXiv:2108.02763) — whose memory stays
+    bounded even when a hold is parked forever (a stalled or dead
+    actor), the metric ``benchmarks/robustness_bench.py`` measures;
   * :class:`CoreSchemeAdapter`, which wraps ANY
     :class:`repro.core.interface.Reclaimer` — the paper's actual scheme
     implementations — so ``new-epoch``, ``hazard``, ``interval``, ``qsr``,
@@ -31,6 +36,7 @@ policy changes POOL PRESSURE, never model outputs.
 
 from __future__ import annotations
 
+import bisect
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -69,9 +75,14 @@ class PolicyHold:
         policy._track_hold(self)
 
     def release(self) -> None:
-        if self.released:
+        """Cooperative release — IDEMPOTENT: the first call wins (claimed
+        atomically under the policy's hold lock), any later call is a
+        no-op.  A genuine double cooperative release bumps the policy's
+        ``double_release`` diagnostic (it used to corrupt live-hold
+        tracking); a late cooperative release after a third-party
+        force-expiry is the expected path and is not counted."""
+        if not self._policy._claim_release(self):
             return
-        self.released = True
         self._do_release()
         self._policy._untrack_hold(self)
         self._policy.holds_open -= 1
@@ -140,6 +151,9 @@ class ReclamationPolicy:
         self.holds_issued = 0
         self.holds_open = 0
         self.force_released = 0
+        #: cooperative release() calls that found the hold already
+        #: cooperatively released (see PolicyHold.release)
+        self.double_release = 0
         # copy-on-write fork references: a forked page is shared by N
         # branches; it must not enter the scheme's retire path until the
         # LAST branch releases it.  Generic implementation: a count table
@@ -245,6 +259,15 @@ class ReclamationPolicy:
                     passthrough.append(ref)
             return passthrough
 
+    # -- allocation births ----------------------------------------------
+    def note_alloc(self, slot: int, pages: Sequence[int]) -> None:
+        """Hook: the pool just allocated ``pages`` to ``slot``.  Most
+        schemes ignore births; the robust policies (hyaline,
+        crystalline) stamp a birth era per page so a stalled entry pins
+        only pages that already existed when it was created — the
+        bounded-memory predicate.  Called by the pool OUTSIDE its own
+        lock (the established order is policy-lock -> pool-lock)."""
+
     # -- retire / reclaim ----------------------------------------------
     def retire_pages(self, slot: int, pages: Sequence[int]) -> None:
         """Retire; while any buffered hold is open, pages park in the
@@ -326,6 +349,24 @@ class ReclamationPolicy:
         with self._hold_lock:
             self._live_holds.discard(h)
 
+    def _claim_release(self, h: PolicyHold, forced: bool = False) -> bool:
+        """Atomically claim the single permitted release of ``h``.
+
+        Returns False when the hold was already released — the caller
+        must then do NOTHING (no ``_do_release``, no hold accounting).
+        This is what makes both ``release()`` and ``force_release()``
+        idempotent and race-free against each other: exactly one caller
+        ever runs the release body."""
+        with self._hold_lock:
+            if h.released:
+                if not forced and not h.forced:
+                    self.double_release += 1
+                return False
+            h.released = True
+            if forced:
+                h.forced = True
+            return True
+
     # -- forced expiry (lifecycle plane) --------------------------------
     def force_release(self, hold: PolicyHold) -> None:
         """Revoke ``hold`` WITHOUT its owner's cooperation — the paper's
@@ -335,10 +376,8 @@ class ReclamationPolicy:
         ``release()`` is a no-op).  Mechanism per scheme: native stamp
         ``force_expire`` for stamp-it, region force-exit for the core
         region schemes, buffered-flush for hazard/LFRC."""
-        if hold.released:
+        if not self._claim_release(hold, forced=True):
             return
-        hold.released = True
-        hold.forced = True
         self.force_released += 1
         self._force_release_impl(hold)
         self._untrack_hold(hold)
@@ -729,6 +768,302 @@ class RefcountPolicy(ReclamationPolicy):
 
 
 # ---------------------------------------------------------------------------
+# Robust native policies: bounded memory under stalled actors
+# ---------------------------------------------------------------------------
+# Shared machinery: a global ERA advanced once per retire batch, a birth
+# era stamped on every page at allocation (``note_alloc``), and an
+# active-entry set (in-flight steps + open holds) whose members carry
+# the era current when they were created.  Protection predicate: an
+# entry with reservation era E protects a retired batch iff
+# ``min_birth(batch) <= E`` — the entry could have observed those pages.
+# Pages born after E (post-stall recycles: a freed page re-allocated
+# gets a FRESH birth era) are invisible to it and flow freely, so a
+# hold that is never released pins at most the pool's footprint at
+# stall time — O(slots x pages_per_slot) — instead of every future
+# retire.  That is the stalled-thread memory bound Hyaline and
+# Crystalline are built around, and what ``robustness_bench.py`` gates.
+
+
+class _RobustHold(PolicyHold):
+    """Native hold for the robust policies: one entry in the active-era
+    set, reservation era fixed at open time."""
+
+    __slots__ = ("handle",)
+
+    def __init__(self, policy, tag: str) -> None:
+        super().__init__(policy, tag)
+        with policy._lock:
+            self.handle = policy._register_entry()
+
+    def _do_release(self) -> None:
+        self._policy._drop_entry(self.handle)
+
+
+class _HyBatch:
+    """One retired batch with its distributed reference count."""
+
+    __slots__ = ("refs", "nrefs")
+
+    def __init__(self, refs: List[PageRef], nrefs: int) -> None:
+        self.refs = refs
+        self.nrefs = nrefs
+
+
+class HyalinePolicy(ReclamationPolicy):
+    """Hyaline-analogue (arXiv:1905.07903): snapshot-free reclamation by
+    per-batch DISTRIBUTED reference counts.
+
+    At retire time the whole batch takes one reference per covering
+    active entry (in-flight step or open hold whose reservation era is
+    >= the batch's oldest birth) and is appended to each such entry's
+    decrement list; with no coverer it frees immediately.  When an entry
+    retires — step completes, hold releases cooperatively or by force —
+    it walks its decrement list; a count hitting zero frees the whole
+    batch.  No scanning and no global snapshot: reclamation work is one
+    decrement per (entry, batch) pair, counted in ``scan_steps``."""
+
+    name = "hyaline"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._lock = threading.Lock()
+        self._era = 0
+        self._birth: Dict[PageRef, int] = {}
+        self._entry_era: Dict[int, int] = {}
+        self._entry_batches: Dict[int, List[_HyBatch]] = {}
+        self._step_handles: Set[int] = set()
+        self._next = 1
+        self._limbo_pages = 0
+        self._scans = 0
+
+    def note_alloc(self, slot: int, pages: Sequence[int]) -> None:
+        with self._lock:
+            era = self._era
+            for p in pages:
+                self._birth[(slot, p)] = era
+
+    def _register_entry(self) -> int:  # caller holds self._lock
+        h = self._next
+        self._next += 1
+        self._entry_era[h] = self._era
+        self._entry_batches[h] = []
+        return h
+
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        with self._lock:
+            h = self._register_entry()
+            self._step_handles.add(h)
+            return h
+
+    def complete_step(self, handle: int) -> None:
+        self._drop_entry(handle)
+
+    def _drop_entry(self, handle: int) -> None:
+        free: List[PageRef] = []
+        with self._lock:
+            self._entry_era.pop(handle, None)
+            self._step_handles.discard(handle)
+            batches = self._entry_batches.pop(handle, [])
+            self._scans += len(batches)
+            for b in batches:
+                b.nrefs -= 1
+                if b.nrefs == 0:
+                    free.extend(b.refs)
+                    self._limbo_pages -= len(b.refs)
+        for slot, p in free:
+            self.release(slot, p)
+
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
+        self._retire_refs([(slot, p) for p in pages])
+
+    def _retire_refs(self, refs: Sequence[PageRef]) -> None:
+        refs = list(refs)
+        if not refs:
+            return
+        with self._lock:
+            min_birth = min(
+                (self._birth.pop(ref, 0) for ref in refs), default=0)
+            covering = [h for h, e in self._entry_era.items()
+                        if min_birth <= e]
+            self._era += 1
+            if covering:
+                batch = _HyBatch(refs, len(covering))
+                for h in covering:
+                    self._entry_batches[h].append(batch)
+                self._limbo_pages += len(refs)
+                refs = []
+        for slot, p in refs:
+            self.release(slot, p)
+
+    def hold(self, tag: str = "hold") -> PolicyHold:
+        h = _RobustHold(self, tag)
+        self.holds_issued += 1
+        self.holds_open += 1
+        return h
+
+    def _force_release_impl(self, hold: PolicyHold) -> None:
+        self._drop_entry(hold.handle)
+
+    def _abandon_steps(self) -> int:
+        with self._lock:
+            handles = list(self._step_handles)
+        for h in handles:
+            self._drop_entry(h)
+        return len(handles)
+
+    def _unreclaimed(self) -> int:
+        with self._lock:
+            return self._limbo_pages
+
+    @property
+    def scan_steps(self) -> int:
+        return self._scans
+
+
+class _CrBatch:
+    """One limbo batch: coverage interval [min_birth, retire_era]."""
+
+    __slots__ = ("min_birth", "retire_era", "refs")
+
+    def __init__(self, min_birth: int, retire_era: int,
+                 refs: List[PageRef]) -> None:
+        self.min_birth = min_birth
+        self.retire_era = retire_era
+        self.refs = refs
+
+
+class CrystallinePolicy(ReclamationPolicy):
+    """Crystalline-analogue (arXiv:2108.02763): wait-free bounded-memory
+    reclamation via slot-local limbo lists and lazy interval checks.
+
+    Retired batches park on the RETIRING slot's limbo list tagged with
+    the interval ``[min_birth, retire_era]``; an active entry with
+    reservation era E covers a batch iff ``min_birth <= E <=
+    retire_era`` — the batch's pages already existed when the entry was
+    created AND the entry was already active when they retired (entries
+    created later can never resurrect an old batch).  Probes — on step
+    completion, hold release and ``reclaim()`` — sweep the limbo lists
+    against the sorted active era set and free every uncovered batch;
+    sweep work is counted in ``scan_steps``."""
+
+    name = "crystalline"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._lock = threading.Lock()
+        self._era = 0
+        self._birth: Dict[PageRef, int] = {}
+        self._entry_era: Dict[int, int] = {}
+        self._step_handles: Set[int] = set()
+        self._next = 1
+        self._limbo: Dict[int, List[_CrBatch]] = {}
+        self._limbo_pages = 0
+        self._scans = 0
+
+    def note_alloc(self, slot: int, pages: Sequence[int]) -> None:
+        with self._lock:
+            era = self._era
+            for p in pages:
+                self._birth[(slot, p)] = era
+
+    def _register_entry(self) -> int:  # caller holds self._lock
+        h = self._next
+        self._next += 1
+        self._entry_era[h] = self._era
+        return h
+
+    def begin_step(self, page_refs: Sequence[PageRef]) -> int:
+        with self._lock:
+            h = self._register_entry()
+            self._step_handles.add(h)
+            return h
+
+    def complete_step(self, handle: int) -> None:
+        self._drop_entry(handle)
+
+    def _drop_entry(self, handle: int) -> None:
+        with self._lock:
+            self._entry_era.pop(handle, None)
+            self._step_handles.discard(handle)
+        self._probe()
+
+    def _park(self, slot: int, refs: List[PageRef]) -> None:
+        # caller holds self._lock; one era bump per parked batch keeps
+        # post-stall allocations strictly younger than the stall
+        b = _CrBatch(
+            min((self._birth.pop(r, 0) for r in refs), default=0),
+            self._era, refs)
+        self._era += 1
+        self._limbo.setdefault(slot, []).append(b)
+        self._limbo_pages += len(refs)
+
+    def _retire(self, slot: int, pages: Sequence[int]) -> None:
+        with self._lock:
+            self._park(slot, [(slot, p) for p in pages])
+        self._probe()
+
+    def _retire_refs(self, refs: Sequence[PageRef]) -> None:
+        refs = list(refs)
+        if not refs:
+            return
+        with self._lock:
+            for slot, pages in _group_by_slot(refs):
+                self._park(slot, [(slot, p) for p in pages])
+        self._probe()
+
+    def _probe(self) -> None:
+        free: List[PageRef] = []
+        with self._lock:
+            if self._limbo_pages:
+                eras = sorted(self._entry_era.values())
+                for slot in list(self._limbo):
+                    keep = []
+                    for b in self._limbo[slot]:
+                        self._scans += 1
+                        i = bisect.bisect_left(eras, b.min_birth)
+                        if i < len(eras) and eras[i] <= b.retire_era:
+                            keep.append(b)  # some active entry covers it
+                        else:
+                            free.extend(b.refs)
+                            self._limbo_pages -= len(b.refs)
+                    if keep:
+                        self._limbo[slot] = keep
+                    else:
+                        del self._limbo[slot]
+        for slot, p in free:
+            self.release(slot, p)
+
+    def reclaim(self) -> None:
+        self._probe()
+
+    def hold(self, tag: str = "hold") -> PolicyHold:
+        h = _RobustHold(self, tag)
+        self.holds_issued += 1
+        self.holds_open += 1
+        return h
+
+    def _force_release_impl(self, hold: PolicyHold) -> None:
+        self._drop_entry(hold.handle)
+
+    def _abandon_steps(self) -> int:
+        with self._lock:
+            handles = list(self._step_handles)
+            self._step_handles.clear()
+            for h in handles:
+                self._entry_era.pop(h, None)
+        self._probe()
+        return len(handles)
+
+    def _unreclaimed(self) -> int:
+        with self._lock:
+            return self._limbo_pages
+
+    @property
+    def scan_steps(self) -> int:
+        return self._scans
+
+
+# ---------------------------------------------------------------------------
 # Adapter over the paper's host-plane schemes
 # ---------------------------------------------------------------------------
 class _PageNode(ReclaimableNode):
@@ -927,6 +1262,20 @@ class CoreSchemeAdapter(ReclamationPolicy):
             self.reclaimer.flush()
         return []
 
+    # -- allocation births ----------------------------------------------
+    def note_alloc(self, slot: int, pages: Sequence[int]) -> None:
+        """IBR is the one core scheme whose safety predicate reads a
+        birth era; stamp it at true allocation time (not lazily when the
+        cell first materialises at retire) so a region hold opened after
+        the allocation covers the page's whole lifetime interval.  The
+        other core schemes ignore births — skip the eager cell creation
+        on their alloc hot path."""
+        if getattr(self.reclaimer, "name", "") != "ibr":
+            return
+        with self._lock:
+            for p in pages:
+                self._cell_for((slot, p))
+
     # -- retire / reclaim ----------------------------------------------
     def _retire(self, slot: int, pages: Sequence[int]) -> None:
         with self._lock:
@@ -1013,13 +1362,16 @@ def _core(scheme_name: str) -> Callable[[], ReclamationPolicy]:
     return factory
 
 
-#: serving-plane policy registry — the paper's seven schemes plus the
-#: native single-issuer analogues kept for continuity with PR 1
+#: serving-plane policy registry — the paper's seven schemes, the native
+#: single-issuer analogues kept for continuity with PR 1, and the two
+#: robust bounded-memory schemes from PAPERS.md (hyaline, crystalline)
 POLICIES: Dict[str, Callable[[], ReclamationPolicy]] = {
     "stamp-it": StampItPolicy,
     "epoch": EpochPolicy,
     "scan": ScanPolicy,
     "refcount": RefcountPolicy,
+    "hyaline": HyalinePolicy,
+    "crystalline": CrystallinePolicy,
     "stamp-it-core": _core("stamp-it"),
     "new-epoch": _core("ner"),
     "hazard": _core("hpr"),
@@ -1029,11 +1381,19 @@ POLICIES: Dict[str, Callable[[], ReclamationPolicy]] = {
     "lfrc": _core("lfrc"),
 }
 
-#: the paper's seven-scheme comparison set at serving scale
+#: the cross-policy comparison set at serving scale: the paper's
+#: seven-scheme set plus the two robust schemes — TEN policies, every
+#: serving/cluster/fault/disagg matrix runs across all of them
 PAPER_POLICIES = (
     "stamp-it", "epoch", "new-epoch", "hazard", "interval", "qsr",
-    "debra", "lfrc",
+    "debra", "lfrc", "hyaline", "crystalline",
 )
+
+#: schemes whose unreclaimed memory stays bounded by the pool footprint
+#: AT STALL TIME under a hold that is never released — the other
+#: schemes pin every subsequent retire until the pool itself runs dry
+#: (see docs/reclamation_policies.md); robustness_bench gates these
+ROBUST_POLICIES = ("hyaline", "crystalline")
 
 
 def make_policy(policy, ledger: Optional[StampLedger] = None):

@@ -137,3 +137,97 @@ def test_list_set_matches_model(keys):
                 model.add(k)
             assert s.contains(k) == (k in model)
         assert s.size() == len(model)
+
+
+# ---------------------------------------------------------------------------
+# Serving policy plane: random hold/step/retire schedules, all ten policies
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(
+        ["stamp-it", "epoch", "new-epoch", "hazard", "interval", "qsr",
+         "debra", "lfrc", "hyaline", "crystalline"]
+    ),
+    schedule=st.lists(
+        st.sampled_from(
+            ["hold", "release", "force_release", "cycle", "retire",
+             "reclaim"]
+        ),
+        min_size=1,
+        max_size=60,
+    ),
+)
+def test_policy_plane_random_schedule(policy, schedule):
+    """Any schedule of hold/release/force_release plus alloc->retire
+    traffic keeps the page-safety invariant every paper policy shares:
+    a hold opened AFTER a batch was allocated and still open when the
+    batch retires must pin those pages out of the free list until it
+    closes.  (The robust schemes deliberately do not protect pages born
+    after the hold's reservation era — that is their bound — so the
+    invariant is stated over the protecting subset.)  Released holds
+    are idempotent (cooperative double releases only bump
+    ``double_release``), and once every hold and step closes, reclaim
+    drains unreclaimed to zero."""
+    from repro.memory import BlockPool, PoolExhausted
+
+    pool = BlockPool(1, 16, policy=policy)
+    p = pool.policy
+    seq = 0             # orders hold creations vs batch allocations
+    holds = []          # (creation_seq, hold), open
+    live = []           # (handle, pages, alloc_seq) in-flight steps
+    pinned = []         # (pages, protecting holds) retired batches
+
+    def check_pins():
+        free_now = set(pool._free[0])
+        for pages, protectors in pinned:
+            if any(not h.released for h in protectors):
+                stuck = [pg for pg in pages if pg in free_now]
+                assert not stuck, (policy, stuck)
+        pinned[:] = [(pgs, hs) for pgs, hs in pinned
+                     if any(not h.released for h in hs)]
+
+    for op in schedule:
+        if op == "hold":
+            if len(holds) < 4:
+                seq += 1
+                holds.append((seq, p.hold("prop")))
+        elif op == "release" and holds:
+            _, h = holds.pop(0)
+            h.release()
+            assert h.released
+            before = p.double_release
+            h.release()  # idempotent: counted, never double-freed
+            assert p.double_release == before + 1
+        elif op == "force_release" and holds:
+            _, h = holds.pop()
+            p.force_release(h)
+            assert h.released and h.forced
+        elif op == "cycle":
+            try:
+                pages = pool.alloc(0, 2)
+            except PoolExhausted:
+                pool.reclaim()
+                continue
+            seq += 1
+            live.append((pool.begin_step([(0, pg) for pg in pages]),
+                         pages, seq))
+        elif op == "retire" and live:
+            handle, pages, born = live.pop(0)
+            protectors = [h for s, h in holds if s > born]
+            pool.complete_step(handle)
+            pool.free(0, pages)
+            if protectors:
+                pinned.append((pages, protectors))
+        elif op == "reclaim":
+            pool.reclaim()
+        check_pins()
+        assert pool.unreclaimed() >= 0
+    # drain: close everything, then reclaim must go to zero
+    for _, h in holds:
+        h.release()
+    for handle, pages, _ in live:
+        pool.complete_step(handle)
+        pool.free(0, pages)
+    for _ in range(4):
+        pool.reclaim()
+    assert pool.unreclaimed() == 0, (policy, p.stats())

@@ -1,0 +1,240 @@
+"""Robustness plane: stalled threads, bounded memory, hold-age watchdog.
+
+The paper's acknowledged weakness is the thread that stops cooperating
+inside a critical region.  This suite covers the three answers this
+repo gives it:
+
+  * the robust policies (hyaline, crystalline) bound what a parked hold
+    can pin — recycled pages carry fresh birth eras the stalled entry
+    never covers (tentpole);
+  * the :class:`HoldWatchdog` escalates hold age deadline -> warn ->
+    force-expire for the non-robust schemes (tentpole);
+  * ``PolicyHold.release`` is idempotent and cooperative double
+    releases are counted, never double-freed (satellite regression).
+
+``benchmarks/robustness_bench.py`` measures the same behaviours at
+serving traffic scale and gates them via ``BENCH_robustness.json``.
+"""
+
+import pytest
+
+from repro.cluster import HoldWatchdog
+from repro.memory import (
+    PAPER_POLICIES,
+    ROBUST_POLICIES,
+    BlockPool,
+    StallInjector,
+    make_policy,
+)
+
+
+def churn(pool, slot=0, batch=2, cycles=1, depth_pages=None):
+    """One allocate -> dispatch -> complete -> retire serving cycle."""
+    for _ in range(cycles):
+        pages = pool.alloc(slot, batch)
+        h = pool.begin_step([(slot, p) for p in pages])
+        pool.complete_step(h)
+        pool.free(slot, pages)
+
+
+# ---------------------------------------------------------------------------
+# satellite: idempotent release + double_release counter
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", PAPER_POLICIES)
+def test_double_release_counted_not_double_freed(policy):
+    pool = BlockPool(1, 8, policy=policy)
+    p = pool.policy
+    h = p.hold("ckpt")
+    pages = pool.alloc(0, 2)
+    pool.free(0, pages)
+    h.release()
+    assert h.released and p.holds_open == 0
+    pool.reclaim()
+    drained = pool.unreclaimed()
+    # second/third cooperative release: counted, and a pure no-op
+    h.release()
+    h.release()
+    assert p.double_release == 2
+    assert p.holds_open == 0
+    assert p.force_released == 0
+    assert pool.unreclaimed() == drained
+    pool.reclaim()
+    assert pool.unreclaimed() == 0
+
+
+@pytest.mark.parametrize("policy", ("stamp-it", "hyaline", "crystalline"))
+def test_forced_then_late_cooperative_release_not_counted(policy):
+    """A watchdog force-expiry followed by the stalled actor finally
+    waking up and releasing is the EXPECTED recovery path — it must not
+    count as a double release (that counter flags cooperative bugs)."""
+    p = make_policy(policy)
+    h = p.hold("wedged")
+    p.force_release(h)
+    assert h.released and h.forced and p.force_released == 1
+    h.release()  # the actor wakes up late
+    assert p.double_release == 0
+    assert p.holds_open == 0
+    # forcing an already-released hold is also a counted-free no-op
+    p.force_release(h)
+    assert p.force_released == 1 and p.double_release == 0
+
+
+# ---------------------------------------------------------------------------
+# stall injector
+# ---------------------------------------------------------------------------
+def test_stall_injector_parks_and_recovers():
+    pool = BlockPool(1, 12, policy="stamp-it")
+    inj = StallInjector()
+    inj.park_hold(pool, tag="wedged-ckpt")
+    inj.park_step(pool)
+    assert inj.live_holds() == 1
+    assert inj.stats()["steps_parked"] == 1
+    pages = pool.alloc(0, 3)
+    pool.free(0, pages)
+    pool.reclaim()
+    assert pool.unreclaimed() == 3, "parked hold+step must pin retires"
+    out = inj.release_all()
+    assert out == {"holds": 1, "steps": 1}
+    pool.reclaim()
+    assert pool.unreclaimed() == 0, "recovery after the stall ends"
+    assert inj.live_holds() == 0 and inj.parked_holds() == []
+
+
+def test_stall_injector_accepts_bare_policy_and_forced_holds():
+    p = make_policy("hyaline")
+    inj = StallInjector()
+    h = inj.park_hold(p)
+    p.force_release(h)  # a watchdog got there first
+    out = inj.release_all()  # must not double-count or blow up
+    assert out["holds"] == 0
+    assert p.double_release == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: robust policies bound a parked hold's pin
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ROBUST_POLICIES)
+def test_robust_policy_bounded_under_parked_hold(policy):
+    """Pages allocated AFTER the stall carry birth eras the parked
+    entry never covers: unreclaimed stays frozen at the stall-time pin
+    no matter how much traffic churns past it."""
+    pool = BlockPool(1, 16, policy=policy)
+    inj = StallInjector()
+    held = pool.alloc(0, 3)  # live when the stall begins
+    inj.park_hold(pool, tag="stalled")
+    pool.free(0, held)  # retires under the parked hold -> pinned
+    pinned = pool.unreclaimed()
+    assert pinned == 3
+    for _ in range(50):
+        churn(pool)
+        pool.reclaim()
+        assert pool.unreclaimed() == pinned, (
+            f"{policy}: post-stall churn must not accumulate behind "
+            f"the parked hold")
+    inj.release_all()
+    pool.reclaim()
+    assert pool.unreclaimed() == 0
+
+
+@pytest.mark.parametrize("policy", ("stamp-it", "epoch"))
+def test_non_robust_policy_accumulates_under_parked_hold(policy):
+    """The contrast case the bench gates on: without robustness, every
+    retire behind the stall pins."""
+    pool = BlockPool(1, 16, policy=policy)
+    inj = StallInjector()
+    inj.park_hold(pool)
+    before = pool.unreclaimed()
+    for _ in range(3):
+        churn(pool)
+    pool.reclaim()
+    assert pool.unreclaimed() > before + 3
+    inj.release_all()
+    pool.reclaim()
+    assert pool.unreclaimed() == 0
+
+
+def test_interval_hold_covers_pages_allocated_before_it():
+    """Regression: IBR birth eras are stamped at allocation time (via
+    ``note_alloc``), not lazily at retire — a reservation opened after
+    the allocation must cover the page's whole lifetime interval."""
+    pool = BlockPool(1, 16, policy="interval")
+    pages = pool.alloc(0, 2)
+    h = pool.policy.hold("reader")
+    pool.free(0, pages)  # retired while the reservation is open
+    for _ in range(4):
+        pool.reclaim()
+    assert pool.unreclaimed() >= 2
+    h.release()
+    pool.reclaim()
+    assert pool.unreclaimed() == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: hold-age watchdog escalation
+# ---------------------------------------------------------------------------
+def test_watchdog_warns_then_expires():
+    p = make_policy("stamp-it")
+    wd = HoldWatchdog(expire_after=4, warn_after=2)
+    h = p.hold("wedged")
+    assert wd.tick([h]) == 0  # first seen, age 0
+    assert wd.tick([h]) == 0  # age 1
+    assert wd.hold_warnings == 0
+    assert wd.tick([h]) == 0  # age 2: warn fires once
+    assert wd.hold_warnings == 1 and wd.warnings == [("wedged", 2)]
+    assert wd.tick([h]) == 0  # age 3: no re-warn
+    assert wd.hold_warnings == 1
+    expired = wd.tick([h])    # age 4: force-expire
+    assert expired == 1 and h.released and h.forced
+    assert wd.hold_expired_by_watchdog == 1
+    assert p.force_released == 1
+    # released holds fall out of tracking
+    assert wd.tick([h]) == 0
+    assert wd.stats()["tracked"] == 0
+
+
+def test_watchdog_spares_young_released_and_exempt_holds():
+    p = make_policy("crystalline")
+    wd = HoldWatchdog(expire_after=2, warn_after=1,
+                      exempt_tags=("kv-handoff",))
+    young = p.hold("young")
+    exempt = p.hold("kv-handoff")
+    cooperative = p.hold("fast")
+    cooperative.release()  # closes on its own before any deadline
+    for _ in range(5):
+        wd.tick([young, exempt, cooperative])
+        if young.released:
+            break
+    assert young.released and young.forced, "deadline reached"
+    assert not exempt.released, "exempt tag never expired"
+    assert not cooperative.forced
+    assert wd.hold_expired_by_watchdog == 1
+    exempt.release()
+    assert p.double_release == 0
+
+
+def test_watchdog_validates_config():
+    with pytest.raises(ValueError):
+        HoldWatchdog(expire_after=0)
+    with pytest.raises(ValueError):
+        HoldWatchdog(expire_after=3, warn_after=5)
+    wd = HoldWatchdog(expire_after=8)
+    assert wd.warn_after == 4  # defaults to half the deadline
+
+
+def test_watchdog_end_to_end_recovery():
+    """Bench scenario in miniature: non-robust policy + watchdog ==
+    bounded.  The stall pins retires only until the deadline tick."""
+    pool = BlockPool(1, 16, policy="stamp-it")
+    inj = StallInjector()
+    wd = HoldWatchdog(expire_after=3)
+    inj.park_hold(pool, tag="stalled-actor")
+    peak = 0
+    for _ in range(10):
+        churn(pool)
+        wd.tick(inj.parked_holds())
+        pool.reclaim()
+        peak = max(peak, pool.unreclaimed())
+    assert wd.hold_expired_by_watchdog == 1
+    assert pool.unreclaimed() == 0, "fully recovered after expiry"
+    assert peak <= 16, "never pinned more than the pool"
+    assert inj.release_all()["holds"] == 0  # already force-expired
