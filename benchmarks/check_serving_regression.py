@@ -50,6 +50,20 @@ Gates, in order:
      after — and all three gated scenarios must be present; schemes
      with ``"gate": null`` are documented-unbounded and SKIPped.
 
+  9. **reclaim latency** — if the baseline has a ``reclaim_latency``
+     section (``serving_bench --reclaim-latency``): every one of the
+     paper's ten policies must have a retire->reclaim step-latency
+     distribution traced through the obs plane
+     (``repro.obs.ReclaimTracer``), and stamp-it's p50 must be no worse
+     than the best epoch-family p50 — the paper's "reclaims earlier"
+     claim, now CI-gated on the measured distribution; an absent
+     section is a SKIP.
+ 10. **observability overhead** — if the baseline has an
+     ``obs_overhead`` section (``serving_bench --obs-overhead``): the
+     enabled registry+tracer+spans must cost at most the recorded
+     ``gate_pct`` (default 5%) of stamp-it steps/sec vs the disabled
+     null-instrument path; an absent section is a SKIP.
+
 ``--strict`` turns every SKIP above (absent file or section) into a
 FAIL — CI wires it on the bench-gate job so a silently missing section
 can never pass again.
@@ -81,8 +95,14 @@ from .fault_bench import (
     DEFAULT_HEARTBEAT_TIMEOUT,
     UNBLOCK_SLACK_STEPS,
 )
+from repro.memory import PAPER_POLICIES
+
 from .robustness_bench import BENCH_ROBUSTNESS_JSON
-from .serving_bench import BENCH_JSON, run
+from .serving_bench import BENCH_JSON, OBS_OVERHEAD_GATE_PCT, run
+
+#: schemes whose reclaim cadence is the paper's two-epoch-advance
+#: baseline — stamp-it's traced p50 must not exceed the best of these
+EPOCH_FAMILY = ("epoch", "new-epoch")
 
 #: set by --strict: an absent bench file/section FAILS instead of SKIPs
 STRICT = False
@@ -400,6 +420,66 @@ def _check_robustness() -> int:
     return 0
 
 
+def _check_reclaim_latency(baseline) -> int:
+    rows = baseline.get("reclaim_latency")
+    if not rows:
+        return _skip("no 'reclaim_latency' section in baseline (run "
+                     "`serving_bench --reclaim-latency` to add one)")
+    by_policy = {r["policy"]: r for r in rows}
+    bad = [(p, "policy missing from reclaim_latency section")
+           for p in PAPER_POLICIES if p not in by_policy]
+    for p, r in by_policy.items():
+        if not r.get("retires"):
+            bad.append((p, "no retires traced"))
+        elif r.get("p50_steps") is None:
+            bad.append((p, "no p50 in traced distribution"))
+        elif r.get("pending_retired"):
+            bad.append((p, f"{r['pending_retired']} retires never "
+                        f"reclaimed at drain"))
+    shown = {p: (r.get("p50_steps"), r.get("p99_steps"))
+             for p, r in sorted(by_policy.items())}
+    print(f"retire->reclaim latency steps (p50, p99) by policy: {shown}")
+    si = by_policy.get("stamp-it")
+    epochs = [by_policy[p]["p50_steps"] for p in EPOCH_FAMILY
+              if p in by_policy
+              and by_policy[p].get("p50_steps") is not None]
+    if si and epochs and si.get("p50_steps") is not None:
+        gate = min(epochs)
+        print(f"stamp-it p50={si['p50_steps']} vs best epoch-family "
+              f"p50={gate} (gate: <=)")
+        if si["p50_steps"] > gate:
+            bad.append(("stamp-it",
+                        f"p50={si['p50_steps']} > epoch-family {gate} — "
+                        f"stamp-it no longer reclaims at least as early"))
+    if bad:
+        print(f"FAIL: reclaim-latency rows out of gate: {bad}")
+        return 1
+    print(f"OK: all {len(rows)} policies traced; stamp-it p50 within "
+          f"the epoch-family gate")
+    return 0
+
+
+def _check_obs_overhead(baseline) -> int:
+    rows = baseline.get("obs_overhead")
+    if not rows:
+        return _skip("no 'obs_overhead' section in baseline (run "
+                     "`serving_bench --obs-overhead` to add one)")
+    bad = []
+    for r in rows:
+        gate = float(r.get("gate_pct", OBS_OVERHEAD_GATE_PCT))
+        pct = r.get("overhead_pct")
+        print(f"{r.get('policy')}: obs overhead {pct}% "
+              f"(enabled {r.get('steps_per_s_enabled')} vs disabled "
+              f"{r.get('steps_per_s_disabled')} steps/s; gate <= {gate}%)")
+        if pct is None or pct > gate:
+            bad.append((r.get("policy"), f"overhead {pct}% > {gate}%"))
+    if bad:
+        print(f"FAIL: observability no longer near-free: {bad}")
+        return 1
+    print("OK: enabled observability within the overhead budget")
+    return 0
+
+
 def main(argv=None) -> int:
     global STRICT
     ap = argparse.ArgumentParser()
@@ -434,7 +514,13 @@ def main(argv=None) -> int:
     rc = _check_fault()
     if rc:
         return rc
-    return _check_robustness()
+    rc = _check_robustness()
+    if rc:
+        return rc
+    rc = _check_reclaim_latency(baseline)
+    if rc:
+        return rc
+    return _check_obs_overhead(baseline)
 
 
 if __name__ == "__main__":

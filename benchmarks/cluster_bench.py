@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.cluster import ReplicaGroup
 from repro.configs import ARCHS, smoke_config
+from repro.memory import PAPER_POLICIES
 from repro.models import Model
 
 BENCH_CLUSTER_JSON = (
@@ -104,7 +105,7 @@ def _drive_cluster(model, *, policy, n_replicas, requests_per_replica,
     }
 
 
-def run(policies=("stamp-it",), replica_counts=(1, 2, 4),
+def run(policies=PAPER_POLICIES, replica_counts=(1, 2, 4),
         requests_per_replica=6, max_new=8, checkpoint_every=8,
         hold_steps=4, seed=0, write_json=False):
     model = Model(smoke_config(ARCHS["qwen2-0.5b"]))
@@ -132,8 +133,9 @@ def run(policies=("stamp-it",), replica_counts=(1, 2, 4),
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--policies", default="stamp-it",
-                    help="comma-separated policy names")
+    ap.add_argument("--policies", default="",
+                    help="comma-separated policy names (default: the "
+                         "full paper set, hyaline/crystalline included)")
     ap.add_argument("--replicas", default="",
                     help="comma-separated replica counts (default 1,2,4; "
                          "--smoke default 1,2)")
@@ -141,7 +143,8 @@ def main() -> None:
                     help="CI-sized run: fewer replicas/requests, no JSON")
     ap.add_argument("--no-write", action="store_true")
     args = ap.parse_args()
-    policies = tuple(p for p in args.policies.split(",") if p)
+    policies = (tuple(p for p in args.policies.split(",") if p)
+                or PAPER_POLICIES)
     if args.replicas:
         counts = tuple(int(x) for x in args.replicas.split(","))
     else:

@@ -24,6 +24,12 @@
    until the source domain is clean — stamp-it frees within ONE scan,
    deferred schemes lag by their batch amortization (the paper's
    asymmetry at handoff granularity).
+3b. **TTFT decomposition** (``bench="serving_disagg_ttft"``) — each
+   request's queue/prefill/handoff/decode wall time read back from the
+   group's lifecycle spans (``repro.obs.SpanRecorder``), per topology:
+   the observability plane's answer to "where did the TTFT go", and the
+   rows ``benchmarks/make_report.py`` renders as the decomposition
+   table.
 4. **Mid-handoff faults** (``bench="serving_disagg_fault"``, all eight
    policies) — the prefill replica is killed while a packet is in the
    export window (``import_delay`` > heartbeat timeout forces the
@@ -272,6 +278,66 @@ def bench_handoff_pin(model, policies, *, write_json):
 
 
 # ---------------------------------------------------------------------------
+# workload 3b: span-derived TTFT decomposition (obs plane)
+# ---------------------------------------------------------------------------
+def _drive_ttft_spans(model, *, tiered, n_requests):
+    """Serve a prompt stream and decompose each request's lifecycle from
+    the group's :class:`~repro.obs.SpanRecorder` — queue (submit->admit),
+    prefill (admit->first token), handoff (export->commit, tiered only)
+    and decode wall time per request, the observability tentpole's
+    answer to 'where did the TTFT go'.  Spans are on by default on every
+    ReplicaGroup; this reads them back rather than re-deriving phase
+    boundaries from request timestamps."""
+    group = _make_group(model, tiered=tiered)
+    prompts = _short_prompts(n_requests, seed=17, lo=100, hi=200)
+    tracked = [group.submit(p, max_new_tokens=SHORT_MAX_NEW)
+               for p in prompts]
+    # warmup pass already folded in: first requests pay compile, so run
+    # the stream twice and only read spans of the second batch
+    group.run_until_done()
+    tracked = [group.submit(p, max_new_tokens=SHORT_MAX_NEW)
+               for p in prompts]
+    group.run_until_done()
+    group.drain()
+    phases = {ph: [] for ph in ("queue", "prefill", "handoff", "decode")}
+    ttfts = []
+    for r in tracked:
+        bd = group.spans.ttft_breakdown(r._span_rid)
+        for ph in phases:
+            phases[ph].append(bd.get(ph, 0.0) * 1e3)
+        ttfts.append((r.first_token_at - r.submitted_at) * 1e3)
+    return phases, sorted(ttfts)
+
+
+def bench_ttft(model, *, n_requests, write_json):
+    rows = []
+    for topology in ("tiered", "unified"):
+        phases, ttfts = _drive_ttft_spans(
+            model, tiered=topology == "tiered", n_requests=n_requests)
+        row = {
+            "bench": "serving_disagg_ttft",
+            "mode": "ttft",
+            "policy": "stamp-it",
+            "topology": topology,
+            "requests": n_requests,
+            "ttft_p50_ms": round(_pct(ttfts, 50), 3),
+            "ttft_p99_ms": round(_pct(ttfts, 99), 3),
+        }
+        for ph, vals in phases.items():
+            row[f"{ph}_ms_p50"] = round(_pct(sorted(vals), 50), 3)
+            row[f"{ph}_ms_mean"] = round(
+                sum(vals) / max(len(vals), 1), 3)
+        rows.append(row)
+        print(f"[ttft] {topology:8s} p50 {row['ttft_p50_ms']:8.1f}ms = "
+              f"queue {row['queue_ms_p50']}ms + prefill "
+              f"{row['prefill_ms_p50']}ms (+ handoff "
+              f"{row['handoff_ms_p50']}ms into token 2)")
+    if write_json:
+        _update_json(disagg=rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # workload 4: kill the prefill replica mid-handoff, per policy
 # ---------------------------------------------------------------------------
 def _drive_kill(model, policy, *, heartbeat_timeout, temperature=0.8,
@@ -373,6 +439,8 @@ def main() -> None:
     if not args.skip_itl:
         rows += bench_itl(model, n_short=n_short,
                           long_tokens=long_tokens, write_json=write)
+    rows += bench_ttft(model, n_requests=4 if args.smoke else 6,
+                       write_json=write)
     rows += bench_handoff_pin(model, policies, write_json=write)
     rows += bench_kill(model, policies,
                        heartbeat_timeout=args.heartbeat_timeout,
@@ -383,6 +451,10 @@ def main() -> None:
         # CI smoke gates: equality + a completed handoff + a clean kill
         eq = rows[0]
         assert eq["greedy_equal"] and eq["sampled_equal"]
+        tt = next(r for r in rows if r["bench"] == "serving_disagg_ttft"
+                  and r["topology"] == "tiered")
+        assert tt["prefill_ms_mean"] > 0, "no prefill spans recorded"
+        assert tt["handoff_ms_mean"] > 0, "no handoff spans recorded"
         pin = next(r for r in rows if r["mode"] == "handoff_pin")
         assert pin["handoffs"] >= 1 and pin["pinned_during_handoff"] >= 1
         assert pin["reclaim_rounds_after_commit"] <= 1  # stamp-it

@@ -1,15 +1,27 @@
 """Reclamation efficiency (paper §4.4, Figs. 6/8-11): unreclaimed nodes
 over time.  LFRC is the gold standard (immediate); Stamp-it should track
 it closely; HP/DEBRA degrade with thread count; QSR strands nodes in the
-update-heavy hashmap workload."""
+update-heavy hashmap workload.
+
+The per-scheme sample streams are routed through a
+:class:`repro.obs.Registry` histogram (``unreclaimed_nodes``, labeled
+``scheme``/``threads``) — the row's mean/max/p99 are read back from the
+instrument's exact sum/count/max tracking, the same surface the serving
+plane's retire->reclaim tracing reports through, instead of a private
+reduction over the raw series.  The raw ``series`` stays in the row for
+the report's over-time plot.
+"""
 
 from __future__ import annotations
+
+from repro.obs import Registry
 
 from . import hashmap_bench, queue_bench
 from .harness import run_trial
 
 
-def run(schemes, n_threads, seconds, sample_every=0.05):
+def run(schemes, n_threads, seconds, sample_every=0.05, registry=None):
+    reg = registry if registry is not None else Registry()
     rows = []
     for scheme in schemes:
         res = run_trial(
@@ -18,14 +30,17 @@ def run(schemes, n_threads, seconds, sample_every=0.05):
         )
         series = [(round(s["t"], 3), s["unreclaimed"])
                   for s in res["samples"]]
+        hist = reg.histogram("unreclaimed_nodes", scheme=scheme,
+                             threads=n_threads)
+        for _, u in series:
+            hist.observe(u)
         rows.append({
             "bench": "reclamation_efficiency", "scheme": scheme,
             "threads": n_threads,
             "final_unreclaimed": res["final_unreclaimed"],
-            "mean_unreclaimed": (
-                sum(u for _, u in series) / max(len(series), 1)
-            ),
-            "max_unreclaimed": max((u for _, u in series), default=0),
+            "mean_unreclaimed": hist.mean or 0,
+            "max_unreclaimed": hist.max if hist.max is not None else 0,
+            "p99_unreclaimed": hist.percentile(99) or 0,
             "series": series,
         })
     return rows

@@ -52,6 +52,7 @@ from pathlib import Path
 from repro.cluster import HoldWatchdog
 from repro.memory import PAPER_POLICIES, BlockPool, PoolExhausted, \
     StallInjector
+from repro.obs import Registry
 
 BENCH_ROBUSTNESS_JSON = Path(__file__).resolve().parent.parent \
     / "BENCH_robustness.json"
@@ -88,11 +89,19 @@ def watchdog_bound(footprint_at_stall: int, baseline_peak: int) -> int:
 def _drive_stall(policy: str, *, watchdog: bool = False, steps: int = 150,
                  stall_at: int = 40) -> dict:
     """One scenario: synthetic traffic, park a hold at ``stall_at``,
-    keep serving, measure the memory bound."""
-    pool = BlockPool(SLOTS, PAGES_PER_SLOT, policy=policy)
+    keep serving, measure the memory bound.  The pool carries a fresh
+    obs registry: the row's retire->reclaim percentiles and the parked
+    hold's forced-expiry lifetime come from the pool's
+    :class:`~repro.obs.ReclaimTracer` histograms (the same instruments
+    the serving plane reports), and the unreclaimed-pages series is
+    folded into a registry histogram rather than reduced by hand."""
+    reg = Registry()
+    pool = BlockPool(SLOTS, PAGES_PER_SLOT, policy=policy, registry=reg)
     injector = StallInjector()
     wd = HoldWatchdog(expire_after=WATCHDOG_DEADLINE) if watchdog else None
     lanes = [deque() for _ in range(SLOTS)]  # (handle, pages) per slot
+    unreclaimed_hist = reg.histogram(
+        "unreclaimed_pages", policy=policy, watchdog=watchdog)
     series = []
     footprint_at_stall = None
     backpressure = 0
@@ -120,7 +129,9 @@ def _drive_stall(policy: str, *, watchdog: bool = False, steps: int = 150,
             lane.append((pool.begin_step(refs), pages))
         if wd is not None:
             wd.tick(injector.parked_holds())
-        series.append(pool.unreclaimed())
+        u = pool.unreclaimed()
+        unreclaimed_hist.observe(u)
+        series.append(u)
 
     bound = gate = time_to_bound = None
     baseline_peak = max(series[:stall_at]) if stall_at else 0
@@ -138,6 +149,8 @@ def _drive_stall(policy: str, *, watchdog: bool = False, steps: int = 150,
                 (t - stall_at for t in range(stall_at, steps)
                  if max(series[t:]) <= bound), None)
     tail = series[-max(1, steps // 4):]
+    trace = pool.trace.summary()
+    rl, hl = trace["reclaim_latency"], trace["hold_lifetime"]
     row = {
         "policy": policy + ("+watchdog" if watchdog else ""),
         "watchdog": watchdog,
@@ -149,8 +162,21 @@ def _drive_stall(policy: str, *, watchdog: bool = False, steps: int = 150,
         "pipeline_depth": PIPELINE_DEPTH,
         "footprint_at_stall": footprint_at_stall,
         "baseline_peak": baseline_peak,
-        "peak_unreclaimed": max(series),
+        "peak_unreclaimed": int(unreclaimed_hist.max or 0),
         "tail_peak_unreclaimed": max(tail),
+        "unreclaimed_p99": unreclaimed_hist.percentile(99),
+        # retire->reclaim latency under the stall (obs tracer): for the
+        # robust/watchdog rows this stays finite; pinned retires never
+        # reclaimed show up as pending, not as samples
+        "reclaim_p50_steps": rl["p50"],
+        "reclaim_p99_steps": rl["p99"],
+        "reclaims_traced": rl["count"],
+        "pending_retired": trace["pending_retired"],
+        # the parked hold's lifetime lands here when (and only when) the
+        # watchdog force-expires it — one histogram count per hold, the
+        # no-double-count invariant tests/test_obs.py asserts
+        "hold_lifetimes_traced": hl["count"],
+        "hold_lifetime_max_steps": hl["max"],
         "final_unreclaimed": series[-1],
         "bound_pages": bound,
         "bounded": bound is not None and max(series) <= bound,

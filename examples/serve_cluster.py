@@ -77,6 +77,12 @@ def main() -> None:
                     help="missed cluster steps before a silent replica "
                          "is declared dead")
     ap.add_argument("--no-migration", action="store_true")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write the run's request-lifecycle spans "
+                         "(submit/admit/chunk/first-token/handoff/"
+                         "finish) + final metrics snapshot as Chrome-"
+                         "trace JSON (load in chrome://tracing or "
+                         "Perfetto)")
     args = ap.parse_args()
     tiered = bool(args.prefill_replicas or args.decode_replicas)
     if tiered and not (args.prefill_replicas and args.decode_replicas):
@@ -213,6 +219,19 @@ def main() -> None:
     for _, r in group.route_trace:
         per_route[r] = per_route.get(r, 0) + 1
     print(f"routing spread: {dict(sorted(per_route.items()))}")
+    if args.trace_out:
+        import json
+
+        from repro.obs import chrome_trace, validate_chrome_trace
+
+        group.metrics()  # publish pull-style gauges into the registry
+        trace = chrome_trace(group.spans.spans, registry=group.obs)
+        n = validate_chrome_trace(trace)
+        with open(args.trace_out, "w") as f:
+            json.dump(trace, f)
+        print(f"trace: {n} events ({len(group.spans.spans)} spans, "
+              f"{len(trace.get('metadata', {}).get('metrics', []))} "
+              f"metrics) -> {args.trace_out}")
     for r in group.requests[:3]:
         print(f"  req {r.rid}@replica{r.replica}: "
               f"prompt[{len(r.prompt)}] -> {r.generated}")

@@ -49,6 +49,8 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 
 from ..memory.block_pool import ShardedPoolSet
+from ..obs.metrics import Registry, apply_aliases
+from ..obs.spans import SpanRecorder
 from ..serving.engine import ServingEngine
 from ..serving.scheduler import ForkGroup, Request
 from .journal import RequestJournal
@@ -82,6 +84,7 @@ class ReplicaGroup:
         decode_replicas: Optional[int] = None,
         prefill_chunk_tokens: Optional[int] = None,
         handoff_import_delay: int = 0,
+        registry: Optional[Registry] = None,
     ) -> None:
         # disaggregated mode: replicas 0..P-1 form the prefill tier,
         # P..P+D-1 the decode tier (n_replicas is derived, not taken)
@@ -106,6 +109,11 @@ class ReplicaGroup:
             )
         self.model = model
         self.policy_name = policy
+        # observability plane: ONE registry + span recorder for the
+        # whole group — replica-labeled instruments land side by side
+        # and a handoff's export/import halves share one trace row
+        self.obs = registry if registry is not None else Registry()
+        self.spans = SpanRecorder(enabled=self.obs.enabled)
         self.shards = ShardedPoolSet(n_replicas)
         self._params = model.init_params(seed)
         self._sample_seed = sample_seed
@@ -189,6 +197,8 @@ class ReplicaGroup:
             params=self._params,
             shard_set=self.shards,
             journal=RequestJournal(i),
+            registry=self.obs,
+            spans=self.spans,
         )
 
     @property
@@ -510,7 +520,7 @@ class ReplicaGroup:
         scans = sum(
             s["pool_scan_steps"] + s["ledger_scan_steps"] for s in per
         )
-        out = {
+        out = apply_aliases({
             "replicas": self.n_replicas,
             "live_replicas": len(live),
             "crashed_replicas": sorted(
@@ -535,9 +545,38 @@ class ReplicaGroup:
             "replicas_added": self.replicas_added,
             "replicas_drained": self.replicas_drained,
             "per_replica": per,
-        }
+        })
         if self.tiers is not None:
             out["tiers"] = self.tiers.stats()
         if self.lifecycle is not None:
             out["lifecycle"] = self.lifecycle.stats()
         return out
+
+    def metrics(self) -> List[dict]:
+        """Cluster-wide registry snapshot: publish every plane's
+        counters into the shared registry (engines + pools, cluster
+        ledger, tiers, lifecycle, the group itself), then collect.
+        Returns the sorted instrument snapshots (see
+        docs/observability.md for the catalog)."""
+        reg = self.obs
+        if not reg.enabled:
+            return []
+        for e in self.engines:
+            e.publish()
+        g = reg.gauge
+        g("cluster_steps").set(self.steps)
+        g("cluster_replicas").set(self.n_replicas)
+        g("cluster_live_replicas").set(len(self.live_ids()))
+        g("cluster_checkpoints").set(self.checkpoints)
+        g("cluster_holds_issued").set(self.ledger.holds_issued)
+        g("cluster_holds_open").set(self.ledger.open_holds)
+        g("cluster_holds_force_expired").set(self.ledger.force_expired)
+        if self.tiers is not None:
+            for k, v in self.tiers.stats().items():
+                if isinstance(v, (int, float)):
+                    g(f"tiers_{k}").set(v)
+        if self.lifecycle is not None:
+            for k, v in self.lifecycle.stats().items():
+                if isinstance(v, (int, float)):
+                    g(f"lifecycle_{k}").set(v)
+        return reg.collect()

@@ -224,6 +224,14 @@ class TierManager:
                 ))
                 self.handoffs_started += 1
                 self.pages_handed_off += data["n_pages"]
+                spans = g.spans
+                if spans.enabled:
+                    srid = getattr(req, "_span_rid", f"r{i}.{src_rid}")
+                    spans.begin(srid, "handoff", step=self.ticks,
+                                replica=i, src=i,
+                                pages=data["n_pages"])
+                    spans.event(srid, "handoff-export", step=self.ticks,
+                                replica=i)
 
     def _import(self) -> None:
         g = self.group
@@ -247,6 +255,11 @@ class TierManager:
             if g.engines[p.dst].import_request(p.data):
                 p.state = "imported"
                 p.imported_tick = self.ticks
+                if g.spans.enabled:
+                    g.spans.event(
+                        getattr(p.req, "_span_rid", f"r{p.src}.{p.src_rid}"),
+                        "handoff-import", step=self.ticks,
+                        replica=p.dst)
             else:
                 self.import_retries += 1
         self.packets = [p for p in self.packets if p.state != "aborted"]
@@ -269,6 +282,14 @@ class TierManager:
             p.state = "done"
             self.handoffs_completed += 1
             self.hold_ticks_total += self.ticks - p.export_tick
+            if g.spans.enabled:
+                srid = getattr(p.req, "_span_rid",
+                               f"r{p.src}.{p.src_rid}")
+                g.spans.event(srid, "handoff-commit", step=self.ticks,
+                              replica=p.dst)
+                g.spans.end(srid, "handoff", step=self.ticks,
+                            dst=p.dst,
+                            hold_ticks=self.ticks - p.export_tick)
             self.log.append({
                 "src": p.src, "dst": p.dst, "pages": p.data["n_pages"],
                 "export_tick": p.export_tick,
@@ -283,6 +304,10 @@ class TierManager:
         p.hold.release()
         p.state = "aborted"
         self.handoffs_aborted += 1
+        if self.group.spans.enabled:
+            self.group.spans.end(
+                getattr(p.req, "_span_rid", f"r{p.src}.{p.src_rid}"),
+                "handoff", step=self.ticks, aborted=True)
         self.log.append({
             "src": p.src, "dst": p.dst, "pages": p.data["n_pages"],
             "export_tick": p.export_tick, "imported_tick": -1,

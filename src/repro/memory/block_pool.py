@@ -18,6 +18,8 @@ from __future__ import annotations
 import threading
 from typing import List, Optional, Sequence, Union
 
+from ..obs.metrics import Registry
+from ..obs.reclaim_trace import ReclaimTracer
 from .policy import PolicyHold, ReclamationPolicy, make_policy
 from .stamp_ledger import StampLedger
 
@@ -104,11 +106,16 @@ class BlockPool:
         ledger: Optional[StampLedger] = None,
         shard_id: int = 0,
         shard_set: Optional[ShardedPoolSet] = None,
+        registry: Optional[Registry] = None,
     ) -> None:
         self.n_slots = n_slots
         self.pages_per_slot = pages_per_slot
         self.policy = make_policy(policy, ledger)
         self.policy_name = self.policy.name
+        # observability plane: retire->reclaim / hold-lifetime /
+        # fork-park tracing, labeled by policy and shard (replica)
+        self.trace = ReclaimTracer(registry, self.policy_name,
+                                   replica=shard_id)
         # cluster plane: which replica's slice of the logical pool this is
         self.shard_id = shard_id
         self.shard_set = shard_set
@@ -160,10 +167,14 @@ class BlockPool:
             return sum(len(f) for f in self._free)
 
     def _release_page(self, slot: int, page: int) -> None:
-        """Policy callback: the page is safe — back on the free list."""
+        """Policy callback: the page is safe — back on the free list.
+        EVERY policy's reclaims funnel through here (wired by
+        ``policy.bind``), which is what makes the retire->reclaim
+        latency histogram uniform across all ten schemes."""
         with self._lock:
             self._free[slot].append(page)
             self.freed_total += 1
+        self.trace.on_reclaim(slot, page)
 
     # ------------------------------------------------------------------
     # step lifecycle (async dispatch) — delegated to the policy
@@ -171,6 +182,7 @@ class BlockPool:
     def begin_step(self, page_refs: Sequence[tuple]) -> int:
         """Dispatch: returns an opaque step handle; page_refs = pages this
         step may read ((slot, page) tuples)."""
+        self.trace.on_step()
         return self.policy.begin_step(page_refs)
 
     def complete_step(self, handle: int) -> None:
@@ -179,12 +191,15 @@ class BlockPool:
     def free(self, slot: int, pages: Sequence[int]) -> None:
         """Retire pages through the policy (NEVER straight to the free
         list — an in-flight step may still read them)."""
+        self.trace.on_retire((slot, p) for p in pages)
         self.policy.retire_pages(slot, pages)
 
     def free_refs(self, refs: Sequence[tuple]) -> None:
         """Batch retire across slots ((slot, page) tuples) — one policy
         bookkeeping event for the whole batch (chunk-batched stamping;
         see ReclamationPolicy.retire_many)."""
+        refs = list(refs)
+        self.trace.on_retire(refs)
         self.policy.retire_many(refs)
 
     # ------------------------------------------------------------------
@@ -236,6 +251,38 @@ class BlockPool:
     @property
     def ledger_scan_steps(self) -> int:
         return self.policy.ledger_scan_steps
+
+    def publish(self) -> None:
+        """Mirror this pool's always-on counters into the registry
+        (pull-style sync: the hot paths keep plain attributes, the
+        registry gets them at collection time)."""
+        reg = self.trace.registry
+        if not reg.enabled:
+            return
+        lab = dict(policy=self.policy_name, replica=self.shard_id)
+        reg.gauge("pool_free_pages", **lab).set(self.free_pages_total())
+        reg.gauge("pool_pages_total", **lab).set(
+            self.n_slots * self.pages_per_slot)
+        reg.gauge("unreclaimed_pages", **lab).set(self.unreclaimed())
+        reg.gauge("pages_freed", **lab).set(self.freed_total)
+        reg.gauge("pages_reused", **lab).set(self.reused_total)
+        reg.gauge("scan_steps", **lab).set(
+            self.scan_steps + self.ledger_scan_steps)
+        p = self.policy
+        reg.gauge("holds_issued", **lab).set(p.holds_issued)
+        reg.gauge("holds_open", **lab).set(p.holds_open)
+        reg.gauge("holds_force_released", **lab).set(p.force_released)
+        reg.gauge("forks_taken", **lab).set(p.forks_taken)
+        reg.gauge("forks_released", **lab).set(p.forks_released)
+        led = self.ledger
+        if led is not None:
+            reg.gauge("ledger_retired_total", **lab).set(
+                led.retired_total)
+            reg.gauge("ledger_reclaimed_total", **lab).set(
+                led.reclaimed_total)
+            reg.gauge("ledger_scan_steps", **lab).set(led.scan_steps)
+            for ev, n in led.events.items():
+                reg.gauge("ledger_events", event=ev, **lab).set(n)
 
     @property
     def ledger(self) -> Optional[StampLedger]:

@@ -139,6 +139,9 @@ class ReclamationPolicy:
     def __init__(self) -> None:
         self.release: Callable[[int, int], None] = lambda s, p: None
         self._bound_pool = None
+        # observability plane: the bound pool's ReclaimTracer (hold
+        # lifetimes + CoW fork-park durations); None until bind()
+        self._tracer = None
         # host-actor hold state (generic buffered implementation)
         self._hold_lock = threading.Lock()
         self._open_holds: Set[PolicyHold] = set()
@@ -175,6 +178,7 @@ class ReclamationPolicy:
             )
         self._bound_pool = pool
         self.release = pool._release_page
+        self._tracer = getattr(pool, "trace", None)
 
     # -- step lifecycle -------------------------------------------------
     def begin_step(self, page_refs: Sequence[PageRef]) -> int:
@@ -228,6 +232,9 @@ class ReclamationPolicy:
                     self._fork[ref] = c - 1
         self.forks_released += len(refs)
         if newly_free:
+            if self._tracer is not None:
+                for ref in newly_free:
+                    self._tracer.on_fork_unpark(ref)
             self.retire_many(newly_free)
 
     def fork_count(self, ref: PageRef) -> int:
@@ -242,6 +249,9 @@ class ReclamationPolicy:
             self._fork.clear()
             parked = list(self._fork_parked)
             self._fork_parked.clear()
+        if self._tracer is not None:
+            for ref in parked:
+                self._tracer.on_fork_unpark(ref)
         return parked
 
     def _intercept_forked(
@@ -252,12 +262,17 @@ class ReclamationPolicy:
             if not self._fork:
                 return list(refs)
             passthrough = []
+            parked = []
             for ref in refs:
                 if self._fork.get(ref, 0) > 0:
                     self._fork_parked.add(ref)
+                    parked.append(ref)
                 else:
                     passthrough.append(ref)
-            return passthrough
+        if parked and self._tracer is not None:
+            for ref in parked:
+                self._tracer.on_fork_park(ref)
+        return passthrough
 
     # -- allocation births ----------------------------------------------
     def note_alloc(self, slot: int, pages: Sequence[int]) -> None:
@@ -344,10 +359,17 @@ class ReclamationPolicy:
     def _track_hold(self, h: PolicyHold) -> None:
         with self._hold_lock:
             self._live_holds.add(h)
+        if self._tracer is not None:
+            self._tracer.on_hold_open(h)
 
     def _untrack_hold(self, h: PolicyHold) -> None:
+        # reached through _claim_release exactly once per hold
+        # (cooperative OR forced), so the lifetime histogram cannot
+        # double-count a force-released hold
         with self._hold_lock:
             self._live_holds.discard(h)
+        if self._tracer is not None:
+            self._tracer.on_hold_close(h)
 
     def _claim_release(self, h: PolicyHold, forced: bool = False) -> bool:
         """Atomically claim the single permitted release of ``h``.

@@ -1,0 +1,35 @@
+"""Observability plane (the seventh plane): typed metrics registry,
+retire->reclaim latency tracing, and per-request lifecycle spans.
+
+See ``docs/observability.md`` for the metric catalog, span schema and
+exporter formats."""
+
+from .export import (
+    chrome_trace,
+    prometheus_text,
+    spans_jsonl,
+    validate_chrome_trace,
+)
+from .metrics import (
+    NULL_INSTRUMENT,
+    STATS_KEY_ALIASES,
+    STEP_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    apply_aliases,
+    get_registry,
+    set_registry,
+)
+from .reclaim_trace import ReclaimTracer
+from .spans import PHASES, Span, SpanRecorder
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "ReclaimTracer",
+    "Span", "SpanRecorder", "PHASES",
+    "STATS_KEY_ALIASES", "STEP_BUCKETS", "NULL_INSTRUMENT",
+    "apply_aliases", "get_registry", "set_registry",
+    "chrome_trace", "prometheus_text", "spans_jsonl",
+    "validate_chrome_trace",
+]

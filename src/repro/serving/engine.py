@@ -40,6 +40,8 @@ from ..memory.block_pool import BlockPool, PoolExhausted, ShardedPoolSet
 from ..memory.prefix_cache import PrefixCache, block_key, prefix_block_keys
 from ..models import Model
 from ..models.transformer import BLOCK_SIZE, cache_layout
+from ..obs.metrics import Registry, apply_aliases
+from ..obs.spans import SpanRecorder
 from .device_state import DeviceState
 from .scheduler import ForkGroup, Request, Scheduler
 
@@ -72,6 +74,8 @@ class ServingEngine:
         cow: bool = True,
         speculate_k: int = 0,
         draft_layers: Optional[int] = None,
+        registry: Optional[Registry] = None,
+        spans: Optional[SpanRecorder] = None,
     ) -> None:
         cfg = model.cfg
         assert cache_layout(cfg) == "paged", (
@@ -142,7 +146,14 @@ class ServingEngine:
         # up for TP divisibility).
         pool_pages = int(cache["layers"]["k_pool"].shape[2])
         self.pool = BlockPool(max_slots, pool_pages, policy=policy,
-                              shard_id=replica_id, shard_set=shard_set)
+                              shard_id=replica_id, shard_set=shard_set,
+                              registry=registry)
+        # observability plane: the pool resolved the registry (explicit
+        # or process default); spans are shared group-wide when the
+        # cluster passes its recorder in
+        self.obs = self.pool.trace.registry
+        self.spans = (spans if spans is not None
+                      else SpanRecorder(enabled=self.obs.enabled))
         for s in range(max_slots):
             got = self.pool.alloc(s, 1)
             assert got == [0], "page 0 must be the scratch page"
@@ -225,9 +236,31 @@ class ServingEngine:
                            + self.sched._next_rid) & 0x7FFFFFFF)
         req = self.sched.submit(prompt, max_new_tokens, eos_id,
                                 sample_key=sample_key)
+        if self.spans.enabled:
+            self.spans.begin(self._srid(req), "queue", step=self.steps,
+                             replica=self.replica_id,
+                             prompt_len=len(req.prompt))
         if self.journal is not None:
             self.journal.record_submit(req, self.temperature, self.top_p)
         return req
+
+    def _srid(self, req: Request) -> str:
+        """Stable span identity: survives the rid reassignment a tier
+        handoff performs on import (set once at first submit)."""
+        srid = getattr(req, "_span_rid", None)
+        if srid is None:
+            srid = f"r{self.replica_id}.{req.rid}"
+            req._span_rid = srid  # type: ignore[attr-defined]
+        return srid
+
+    def _span_admit(self, req: Request) -> None:
+        """Close the queue phase, open prefill (all admission paths)."""
+        if not self.spans.enabled:
+            return
+        srid = self._srid(req)
+        self.spans.end(srid, "queue", step=self.steps)
+        self.spans.begin(srid, "prefill", step=self.steps,
+                         replica=self.replica_id)
 
     def fork_submit(self, prompt: Sequence[int], n: int,
                     max_new_tokens: int = 16,
@@ -289,6 +322,11 @@ class ServingEngine:
             return
         req.done = True
         req.finished_at = time.time()
+        if self.spans.enabled:
+            srid = self._srid(req)
+            self.spans.end_open(srid, step=self.steps)
+            self.spans.event(srid, "branch-kill", step=self.steps,
+                             replica=self.replica_id)
         if req.slot >= 0 and self.sched.active.get(req.slot) is req:
             slot = req.slot
             if self.journal is not None:
@@ -482,6 +520,10 @@ class ServingEngine:
         self._refs_dirty = True
         self.dev.stage_reset(slot)
         self.handoffs_out += 1
+        if self.spans.enabled:
+            # close the decode sliver _emit opened for token 1; the
+            # tier plane opens the handoff phase around this export
+            self.spans.end(self._srid(req), "decode", step=self.steps)
         return {
             "req": req,
             "prompt_len": len(req.prompt),
@@ -532,6 +574,9 @@ class ServingEngine:
             self.journal.record_submit(req, self.temperature, self.top_p)
         self.admissions += 1
         self.handoffs_in += 1
+        if self.spans.enabled:
+            self.spans.begin(self._srid(req), "decode", step=self.steps,
+                             replica=self.replica_id, imported=True)
         return True
 
     # ------------------------------------------------------------------
@@ -580,6 +625,7 @@ class ServingEngine:
                                  self.sched.block_table[slot], n_blocks,
                                  seed=int(req.sample_key or 0))
             self.admissions += 1
+            self._span_admit(req)
             return True
         self.prefix_cache.unpin(hits)
 
@@ -598,6 +644,7 @@ class ServingEngine:
             req._first_dev = None  # type: ignore[attr-defined]
             req._tf_suffix = []  # type: ignore[attr-defined]
             self.admissions += 1
+            self._span_admit(req)
             return True
 
         # legacy whole-prompt prefill, bucketed to a power-of-two block
@@ -628,6 +675,7 @@ class ServingEngine:
                              token_from_buf=True, set_token=True,
                              seed=int(req.sample_key or 0))
         self.admissions += 1
+        self._span_admit(req)
         return True
 
     # ------------------------------------------------------------------
@@ -708,6 +756,7 @@ class ServingEngine:
                                  seed=int(req.sample_key or 0))
         self.admissions += 1
         self.fork_admissions += 1
+        self._span_admit(req)
         if not sfx:
             # token 1 is the primary's token 1 (shared branch point)
             self._emit(req, g.first_token)
@@ -768,6 +817,11 @@ class ServingEngine:
         self._chunk_need_pages = need
         req.chunk_pos = end
         self.prefill_chunks += 1
+        if self.spans.enabled:
+            self.spans.event(self._srid(req), "chunk", step=self.steps,
+                             replica=self.replica_id,
+                             index=start // max(C, 1), start=start,
+                             end=end)
         if is_last:
             self._chunk_finalizing = req
             hold = getattr(req, "_chunk_hold", None)
@@ -1000,6 +1054,13 @@ class ServingEngine:
             req.group.first_token = tok
         if not req.first_token_at:
             req.first_token_at = time.time()
+            if self.spans.enabled:
+                srid = self._srid(req)
+                self.spans.end(srid, "prefill", step=self.steps)
+                self.spans.event(srid, "first-token", step=self.steps,
+                                 replica=self.replica_id)
+                self.spans.begin(srid, "decode", step=self.steps,
+                                 replica=self.replica_id)
         if self.journal is not None:
             self.journal.record_token(req, tok)
 
@@ -1030,10 +1091,50 @@ class ServingEngine:
             self.pool.release_fork(foreign)
         self._refs_dirty = True
         self.dev.stage_reset(slot)
+        if self.spans.enabled:
+            srid = self._srid(req)
+            self.spans.end_open(srid, step=self.steps)
+            self.spans.event(srid, "finish", step=self.steps,
+                             replica=self.replica_id,
+                             tokens=len(req.generated))
 
     # ------------------------------------------------------------------
+    def publish(self) -> None:
+        """Mirror this engine's counters into the metrics registry
+        (pull-style; see docs/observability.md).  The pool publishes
+        its own memory-plane instruments."""
+        reg = self.obs
+        if not reg.enabled:
+            return
+        self.pool.publish()
+        lab = dict(policy=self.pool.policy_name,
+                   replica=self.replica_id)
+        g = reg.gauge
+        g("engine_steps", **lab).set(self.steps)
+        g("requests_finished", **lab).set(len(self.sched.finished))
+        g("admissions", **lab).set(self.admissions)
+        g("tokens_emitted", **lab).set(self.tokens_emitted)
+        g("queue_depth", **lab).set(len(self.sched.waiting))
+        g("active_slots", **lab).set(len(self.sched.active))
+        g("inflight_steps", **lab).set(len(self.sched.inflight))
+        g("prefill_chunks", **lab).set(self.prefill_chunks)
+        g("chunk_backpressure", **lab).set(self.chunk_backpressure)
+        g("backpressure_syncs", **lab).set(self.backpressure_syncs)
+        g("handoffs_out", **lab).set(self.handoffs_out)
+        g("handoffs_in", **lab).set(self.handoffs_in)
+        g("prefix_hits", **lab).set(self.prefix_cache.hits)
+        g("prefix_misses", **lab).set(self.prefix_cache.misses)
+        g("fork_admissions", **lab).set(self.fork_admissions)
+        g("spec_drafted", **lab).set(self.spec_drafted)
+        g("spec_accepted", **lab).set(self.spec_accepted)
+
     def stats(self) -> Dict[str, Any]:
-        return {
+        return apply_aliases({
+            # canonical combined bookkeeping counter (components below
+            # keep their historical names; apply_aliases mirrors the
+            # legacy "bookkeeping_scans" spelling)
+            "scan_steps": (self.pool.scan_steps
+                           + self.pool.ledger_scan_steps),
             "replica_id": self.replica_id,
             "steps": self.steps,
             "finished": len(self.sched.finished),
@@ -1094,4 +1195,4 @@ class ServingEngine:
                 self.tokens_emitted
                 / max(self.dev.decode_dispatches, 1)
             ),
-        }
+        })

@@ -1,0 +1,359 @@
+"""Observability plane tests: the typed metrics registry, the
+retire->reclaim latency tracer, request-lifecycle spans and exporters.
+
+Covers the tentpole invariants: disabled registries are true no-ops
+(null instruments, zero collection), stats() keys keep BOTH historical
+spellings (STATS_KEY_ALIASES is what the surfaces actually emit), every
+paper policy's retires/reclaims/hold lifetimes flow through the ONE
+pool-level tracer (force_quiesce counts a force-released hold exactly
+once), tier handoffs land as spans on the group recorder, and the
+Chrome-trace export round-trips its own validator."""
+
+import numpy as np
+import pytest
+
+from repro.cluster import ReplicaGroup
+from repro.configs import ARCHS, smoke_config
+from repro.memory import PAPER_POLICIES, BlockPool
+from repro.models import Model
+from repro.obs import (
+    NULL_INSTRUMENT,
+    STATS_KEY_ALIASES,
+    Registry,
+    SpanRecorder,
+    apply_aliases,
+    chrome_trace,
+    prometheus_text,
+    spans_jsonl,
+    validate_chrome_trace,
+)
+from repro.serving import ServingEngine
+
+MAX_SEQ = 512
+
+
+@pytest.fixture(scope="module")
+def model():
+    return Model(smoke_config(ARCHS["qwen2-0.5b"]))
+
+
+def _prompts(n, seed=0, lo=40, hi=120):
+    rs = np.random.RandomState(seed)
+    return [list(rs.randint(1, 500, rs.randint(lo, hi)).astype(int))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+def test_registry_counter_gauge():
+    reg = Registry()
+    c = reg.counter("retires", policy="stamp-it")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    # get-or-create: same (name, labels) -> same instrument
+    assert reg.counter("retires", policy="stamp-it") is c
+    assert reg.counter("retires", policy="epoch") is not c
+    g = reg.gauge("free_pages", replica=0)
+    g.set(7)
+    g.inc()
+    g.dec(3)
+    assert g.value == 5
+    snaps = reg.collect()
+    assert {s["name"] for s in snaps} == {"retires", "free_pages"}
+    assert all(s["labels"] for s in snaps)
+
+
+def test_registry_find_label_subset():
+    reg = Registry()
+    reg.counter("x", policy="a", replica=0).inc()
+    reg.counter("x", policy="a", replica=1).inc()
+    reg.counter("x", policy="b", replica=0).inc()
+    assert len(reg.find("x")) == 3
+    assert len(reg.find("x", policy="a")) == 2
+    assert len(reg.find("x", policy="a", replica=1)) == 1
+    assert reg.find("y") == []
+
+
+def test_histogram_percentile_exact_small_ints():
+    reg = Registry()
+    h = reg.histogram("lat", policy="p")
+    for v in (1, 1, 1, 2, 2, 3, 4, 4, 8, 100):
+        h.observe(v)
+    assert h.count == 10
+    assert h.min == 1 and h.max == 100
+    assert h.mean == pytest.approx(12.6)
+    # unit buckets through 4: exact percentiles
+    assert h.percentile(50) == 2.0
+    assert h.percentile(10) == 1.0
+    assert h.percentile(80) == 4.0
+    # 100 falls in the (96, 128] bucket: conservative upper bound
+    assert h.percentile(99) == 128.0
+    snap = h.snapshot()
+    assert snap["count"] == 10 and snap["p50"] == 2.0
+    assert sum(snap["bucket_counts"]) == 10
+
+
+def test_histogram_overflow_bucket():
+    reg = Registry()
+    h = reg.histogram("lat", policy="p")
+    h.observe(5000)  # beyond the last bound
+    assert h.count == 1
+    assert h.percentile(50) == 5000  # falls back to exact max
+    assert h.snapshot()["bucket_counts"][-1] == 1
+
+
+def test_disabled_registry_is_noop():
+    reg = Registry(enabled=False)
+    c = reg.counter("x", policy="p")
+    assert c is NULL_INSTRUMENT
+    c.inc()
+    reg.gauge("y").set(9)
+    reg.histogram("z").observe(3)
+    assert c.value == 0
+    assert reg.histogram("z").percentile(50) is None
+    assert reg.collect() == []
+
+
+# ---------------------------------------------------------------------------
+# stats-key aliases (satellite: normalize the historical drift)
+# ---------------------------------------------------------------------------
+def test_apply_aliases_both_directions():
+    s = apply_aliases({"bookkeeping_scans": 7, "unreclaimed": 3})
+    assert s["scan_steps"] == 7          # legacy -> canonical
+    assert s["pool_unreclaimed"] == 3    # canonical -> legacy
+    # the native spelling wins; nothing is overwritten
+    s2 = apply_aliases({"pool_freed": 1, "pages_freed": 2})
+    assert s2["pool_freed"] == 1 and s2["pages_freed"] == 2
+
+
+def test_engine_stats_emit_every_alias(model):
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        policy="stamp-it", pipeline_depth=2,
+                        extra_pages_per_slot=2)
+    for p in _prompts(2, seed=1):
+        eng.submit(p, max_new_tokens=3)
+    eng.run_until_done()
+    eng.drain()
+    s = eng.stats()
+    # the alias map is LIVE: both spellings present and equal wherever
+    # the surface emits either one
+    for legacy, canonical in STATS_KEY_ALIASES.items():
+        if legacy in s or canonical in s:
+            assert s.get(legacy) == s.get(canonical), (legacy, canonical)
+    assert s["bookkeeping_scans"] == s["scan_steps"] \
+        == s["pool_scan_steps"] + s["ledger_scan_steps"]
+    assert s["unreclaimed"] == s["pool_unreclaimed"]
+    assert s["pages_freed"] == s["pool_freed"]
+
+
+# ---------------------------------------------------------------------------
+# retire->reclaim tracer across all ten paper policies (pool plane;
+# no model — the synthetic alloc/step/retire cycle is milliseconds)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sorted(PAPER_POLICIES))
+def test_reclaim_trace_counts_per_policy(policy):
+    reg = Registry()
+    pool = BlockPool(2, 8, policy=policy, registry=reg)
+    for _ in range(12):
+        pages = pool.alloc(0, 2)
+        h = pool.begin_step([(0, p) for p in pages])
+        pool.complete_step(h)
+        pool.free(0, pages)
+    for _ in range(8):  # deferred schemes amortize over scan rounds
+        pool.reclaim()
+        if pool.unreclaimed() == 0:
+            break
+    s = pool.trace.summary()
+    assert s["reclaim_latency"]["count"] == 24
+    assert s["pending_retired"] == 0
+    assert s["reclaim_latency"]["p50"] is not None
+    # the tracer's histograms live in the SHARED registry, labeled with
+    # the policy's NORMALIZED name (hazard -> hpr, interval -> ibr, ...)
+    hists = reg.find("reclaim_latency_steps", policy=pool.policy_name)
+    assert len(hists) == 1 and hists[0].count == 24
+    pool.publish()
+    (g,) = reg.find("pages_freed", kind="gauge",
+                    policy=pool.policy_name)
+    assert g.value == 24
+
+
+@pytest.mark.parametrize("policy", sorted(PAPER_POLICIES))
+def test_force_quiesce_counts_each_hold_once(policy):
+    reg = Registry()
+    pool = BlockPool(2, 8, policy=policy, registry=reg)
+    h1 = pool.hold("cooperative")
+    h2 = pool.hold("stalled")
+    pages = pool.alloc(0, 2)
+    pool.free(0, pages)
+    h1.release()
+    out = pool.force_quiesce()       # force-releases h2 only
+    h2.release()                     # late cooperative release: no-op
+    p = pool.policy
+    assert p.holds_issued == 2
+    assert p.force_released == 1
+    assert out.get("holds_force_released", out.get("force_released", 1))
+    assert p.double_release == 0
+    # the tracer saw each hold close EXACTLY once (cooperative or
+    # forced) — the no-double-count invariant
+    assert pool.trace.summary()["hold_lifetime"]["count"] == 2
+    pool.reclaim()
+    assert pool.unreclaimed() == 0
+
+
+def test_fork_park_traced_generic_policies(model):
+    """CoW fork lifecycle through the tracer: a shared page retired
+    while fork references still cover it PARKS, and the tracer observes
+    the park duration when the last fork lets go.  Parks are a strict
+    subset of forks taken (a fork released before its page retires
+    never parks)."""
+    reg = Registry()
+    eng = ServingEngine(model, max_slots=3, max_seq=MAX_SEQ,
+                        policy="stamp-it", pipeline_depth=2,
+                        extra_pages_per_slot=2, cow=True,
+                        registry=reg)
+    group = eng.fork_submit(_prompts(1, seed=7, lo=150, hi=151)[0], 3,
+                            max_new_tokens=4)
+    eng.run_until_done()
+    eng.drain()
+    s = eng.stats()
+    assert s["forks_taken"] > 0
+    assert s["forks_taken"] == s["forks_released"]
+    t = eng.pool.trace.summary()
+    assert 1 <= t["fork_park"]["count"] <= s["forks_taken"]
+    assert eng.pool.unreclaimed() == 0
+    assert all(r.done for r in group.branches)
+
+
+def test_select_winner_spans_and_trace(model):
+    reg = Registry()
+    eng = ServingEngine(model, max_slots=3, max_seq=MAX_SEQ,
+                        policy="stamp-it", pipeline_depth=2,
+                        extra_pages_per_slot=2, cow=True,
+                        registry=reg)
+    group = eng.fork_submit(_prompts(1, seed=9, lo=140, hi=141)[0], 3,
+                            max_new_tokens=8)
+    while not group.ready:
+        eng.step()
+    for _ in range(3):
+        eng.step()
+    winner = eng.select_winner(group, 0)
+    eng.run_until_done()
+    eng.drain()
+    assert winner.done
+    kills = [sp for sp in eng.spans.spans if sp.name == "branch-kill"]
+    assert len(kills) == 2
+    assert eng.stats()["forks_taken"] == eng.stats()["forks_released"]
+    assert eng.pool.unreclaimed() == 0
+
+
+# ---------------------------------------------------------------------------
+# lifecycle spans (engine + tier handoff) and group metrics
+# ---------------------------------------------------------------------------
+def test_engine_request_spans(model):
+    eng = ServingEngine(model, max_slots=2, max_seq=MAX_SEQ,
+                        policy="stamp-it", pipeline_depth=2,
+                        extra_pages_per_slot=2, registry=Registry())
+    reqs = [eng.submit(p, max_new_tokens=3) for p in _prompts(2, seed=2)]
+    eng.run_until_done()
+    eng.drain()
+    for r in reqs:
+        rid = r._span_rid
+        names = {sp.name for sp in eng.spans.for_request(rid)}
+        assert {"queue", "prefill", "decode",
+                "first-token", "finish"} <= names
+        assert not any(sp.open for sp in eng.spans.for_request(rid))
+        bd = eng.spans.ttft_breakdown(rid)
+        assert bd["prefill"] > 0 and bd["decode"] > 0
+        assert bd["handoff"] == 0  # no tiers on a standalone engine
+
+
+def test_tiered_handoff_spans_and_group_metrics(model):
+    group = ReplicaGroup(
+        model, prefill_replicas=1, decode_replicas=1,
+        policy="stamp-it", router="least-loaded", max_slots=2,
+        max_seq=MAX_SEQ, pipeline_depth=2, extra_pages_per_slot=4,
+    )
+    reqs = [group.submit(p, max_new_tokens=3)
+            for p in _prompts(2, seed=4, lo=100, hi=180)]
+    group.run_until_done()
+    group.drain()
+    assert group.stats()["tiers"]["handoffs_completed"] >= 2
+    for r in reqs:
+        # ONE span row per request across both replicas: the rid is
+        # pinned at first submit and survives the tier-import renumber
+        spans = group.spans.for_request(r._span_rid)
+        names = {sp.name for sp in spans}
+        assert "handoff" in names and "handoff-commit" in names
+        assert group.spans.ttft_breakdown(r._span_rid)["handoff"] > 0
+    metrics = group.metrics()
+    assert metrics
+    by_name = {m["name"] for m in metrics}
+    assert "engine_steps" in by_name
+    assert "cluster_steps" in by_name
+    assert any(m.startswith("tiers_") for m in by_name)
+    # per-replica instruments land side by side in the ONE registry
+    assert len(group.obs.find("engine_steps")) == 2
+
+
+def test_disabled_group_metrics_empty(model):
+    group = ReplicaGroup(
+        model, 1, policy="stamp-it", max_slots=2, max_seq=MAX_SEQ,
+        pipeline_depth=2, registry=Registry(enabled=False),
+    )
+    group.submit(_prompts(1, seed=5)[0], max_new_tokens=2)
+    group.run_until_done()
+    group.drain()
+    assert group.metrics() == []
+    assert group.spans.spans == []
+    assert group.stats()["finished"] == 1  # stats unaffected
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+def test_chrome_trace_roundtrip_synthetic():
+    rec = SpanRecorder()
+    rec.begin("r0.0", "queue", step=0)
+    rec.end("r0.0", "queue", step=1)
+    rec.begin("r0.0", "prefill", step=1)
+    rec.end("r0.0", "prefill", step=3)
+    rec.event("r0.0", "first-token", step=3)
+    reg = Registry()
+    reg.counter("retires", policy="p").inc(3)
+    trace = chrome_trace(rec.spans, registry=reg)
+    n = validate_chrome_trace(trace)
+    assert n == 3
+    phs = sorted(e["ph"] for e in trace["traceEvents"])
+    assert phs == ["X", "X", "i"]  # two complete spans + one instant
+    assert trace["metadata"]["metrics"][0]["value"] == 3
+    # open spans are skipped, never emitted half-formed
+    rec.begin("r0.0", "decode", step=3)
+    assert validate_chrome_trace(chrome_trace(rec.spans)) == 3
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"no": "traceEvents"})
+    with pytest.raises(ValueError):
+        validate_chrome_trace(
+            {"traceEvents": [{"name": "x", "ph": "X", "ts": 0,
+                              "pid": 0, "tid": "a"}]})  # X without dur
+
+
+def test_spans_jsonl_and_prometheus_text():
+    rec = SpanRecorder()
+    rec.begin("r0.0", "queue", step=0)
+    rec.end("r0.0", "queue", step=1)
+    lines = spans_jsonl(rec.spans).strip().splitlines()
+    assert len(lines) == 1 and '"queue"' in lines[0]
+    reg = Registry()
+    reg.counter("retires", policy="p").inc(2)
+    reg.gauge("free_pages", replica=0).set(5)
+    reg.histogram("lat", policy="p").observe(2)
+    text = prometheus_text(reg)
+    assert "# TYPE retires_total counter" in text
+    assert 'retires_total{policy="p"} 2' in text
+    assert "# TYPE lat histogram" in text
+    assert "lat_count" in text and 'le="+Inf"' in text
